@@ -1,0 +1,72 @@
+"""Paper claim [§5.1, ref 17]: the shared-memory job-cache architecture lets
+a single server "dispatch hundreds of jobs per second". Measures wall-clock
+dispatch throughput of the real scheduler + feeder against a synthetic host
+fleet, and batch-submission latency ("submitting a batch of a thousand jobs
+takes less than a second", §3.9)."""
+from __future__ import annotations
+
+from .common import emit, make_project, submit_jobs, timer
+
+from repro.core import (
+    Host,
+    Platform,
+    ProcessingResource,
+    ResourceRequest,
+    ResourceType,
+    ScheduleRequest,
+    next_id,
+    reset_ids,
+)
+
+
+def run() -> None:
+    reset_ids()
+    server = make_project(min_quorum=1)
+    hosts = []
+    for i in range(64):
+        h = Host(
+            id=i + 1,
+            platforms=(Platform("windows", "x86_64"),),
+            resources={ResourceType.CPU: ProcessingResource(ResourceType.CPU, 8, 2e10)},
+            volunteer_id=i + 1,
+        )
+        server.add_host(h)
+        hosts.append(h)
+
+    # batch submission latency (§3.9)
+    t0 = timer()
+    submit_jobs(server, 1000)
+    submit_s = timer() - t0
+    emit("submit_batch_1000", submit_s * 1e6 / 1000.0, f"batch_submit_s={submit_s:.3f}")
+
+    server.tick(0.0)
+
+    # dispatch throughput: hosts request work until the queue drains
+    dispatched = 0
+    rpcs = 0
+    t0 = timer()
+    now = 0.0
+    while dispatched < 1000 and rpcs < 4000:
+        for h in hosts:
+            req = ScheduleRequest(
+                host_id=h.id,
+                requests={ResourceType.CPU: ResourceRequest(req_runtime=2e4, req_idle=8)},
+            )
+            reply = server.rpc(req, now)
+            rpcs += 1
+            dispatched += len(reply.jobs)
+            now += 1e-3
+            if dispatched >= 1000:
+                break
+        server.feeder.fill()
+    wall = timer() - t0
+    rate = dispatched / wall if wall > 0 else 0.0
+    emit(
+        "dispatch_throughput",
+        wall * 1e6 / max(dispatched, 1),
+        f"jobs_per_s={rate:.0f};paper_claim=hundreds_per_s;pass={rate >= 300}",
+    )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,86 @@
+"""Pallas kernel micro-benchmarks (interpret mode on CPU: correctness-scale
+timings; the derived column reports oracle agreement, which is the portable
+claim — TPU wall-clock belongs to the target hardware)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import emit, timer
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.quorum_compare.ops import quorum_compare
+from repro.kernels.rmsnorm.ops import rmsnorm
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+from repro.kernels.ssd_scan.ops import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_ref
+from repro.kernels.swiglu.ops import swiglu
+from repro.kernels.int8_quant.ops import quantize_dequantize
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _time(fn, *args, n=3):
+    fn(*args)  # compile/warm
+    t0 = timer()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (timer() - t0) / n * 1e6
+
+
+def run() -> None:
+    # flash attention
+    q = jax.random.normal(KEY, (1, 256, 4, 64), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 256, 2, 64), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 256, 2, 64), jnp.float32)
+    us = _time(lambda a, b, c: flash_attention(a, b, c, interpret=True), q, k, v)
+    ref = jnp.moveaxis(
+        attention_ref(jnp.moveaxis(q, 1, 2), jnp.moveaxis(k, 1, 2), jnp.moveaxis(v, 1, 2)),
+        1, 2,
+    )
+    err = float(jnp.max(jnp.abs(flash_attention(q, k, v, interpret=True) - ref)))
+    emit("kernel_flash_attention", us, f"max_err_vs_oracle={err:.2e}")
+
+    # ssd scan
+    x = jax.random.normal(KEY, (1, 256, 4, 64), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(KEY, (1, 256, 4))) * 0.05 + 0.001
+    A = -jnp.exp(jax.random.normal(KEY, (4,)) * 0.3)
+    Bm = jax.random.normal(KEY, (1, 256, 1, 64), jnp.float32) * 0.3
+    Cm = jax.random.normal(KEY, (1, 256, 1, 64), jnp.float32) * 0.3
+    us = _time(lambda *a: ssd_scan(*a, interpret=True)[0], x, dt, A, Bm, Cm)
+    y, _ = ssd_scan(x, dt, A, Bm, Cm, interpret=True)
+    yr, _ = ssd_ref(x, dt, A, Bm, Cm)
+    emit("kernel_ssd_scan", us, f"max_err_vs_oracle={float(jnp.max(jnp.abs(y - yr))):.2e}")
+
+    # rmsnorm
+    xr = jax.random.normal(KEY, (512, 1024), jnp.float32)
+    sc = jnp.ones((1024,))
+    us = _time(lambda a, b: rmsnorm(a, b, interpret=True), xr, sc)
+    err = float(jnp.max(jnp.abs(rmsnorm(xr, sc, interpret=True) - rmsnorm_ref(xr, sc))))
+    emit("kernel_rmsnorm", us, f"max_err_vs_oracle={err:.2e}")
+
+    # swiglu
+    g = jax.random.normal(KEY, (512, 1024), jnp.float32)
+    u = jax.random.normal(jax.random.PRNGKey(5), (512, 1024), jnp.float32)
+    us = _time(lambda a, b: swiglu(a, b, interpret=True), g, u)
+    emit("kernel_swiglu", us, "fused_gate=1_hbm_pass")
+
+    # quorum compare (the validator hot loop)
+    a = jax.random.normal(KEY, (1 << 18,), jnp.float32)
+    b = a.at[:100].add(1.0)
+    us = _time(lambda x1, x2: quorum_compare(x1, x2, interpret=True)[0], a, b)
+    nb, _ = quorum_compare(a, b, interpret=True)
+    emit("kernel_quorum_compare", us, f"bad_detected={int(nb)}/100_expected")
+
+    # int8 quant round trip
+    xq = jax.random.normal(KEY, (1024, 256), jnp.float32)
+    us = _time(lambda z: quantize_dequantize(z), xq)
+    err = float(jnp.max(jnp.abs(quantize_dequantize(xq) - xq)))
+    emit("kernel_int8_roundtrip", us, f"max_abs_err={err:.4f};compression=4x")
+
+
+if __name__ == "__main__":
+    run()

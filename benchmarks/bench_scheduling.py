@@ -1,0 +1,90 @@
+"""Paper mechanism (§6.1): WRR causes deadline misses that the EDF override
+avoids. Compares predicted-miss handling of the client resource scheduler
+against a WRR-only variant on a deadline-heavy queue."""
+from __future__ import annotations
+
+from .common import emit, timer
+
+from repro.core import Client, ClientJob, ClientPrefs, ClientResource, ProjectAttachment, ResourceType
+from repro.core.client import RunState
+
+
+def _make_client():
+    c = Client(
+        host_id=1,
+        resources={ResourceType.CPU: ClientResource(ResourceType.CPU, 1, 1e9)},
+        prefs=ClientPrefs(),
+    )
+    c.attach(ProjectAttachment(name="p"))
+    return c
+
+
+def _queue():
+    # one long low-urgency job + a stream of short deadline-tight jobs
+    jobs = [
+        ClientJob(
+            instance_id=1, job_id=1, project="p", app_name="a",
+            usage={ResourceType.CPU: 1.0}, est_flops=1e9,
+            est_flop_count=20 * 3600 * 1e9, deadline=1e9,
+        )
+    ]
+    for i in range(4):
+        jobs.append(
+            ClientJob(
+                instance_id=10 + i, job_id=10 + i, project="p", app_name="a",
+                usage={ResourceType.CPU: 1.0}, est_flops=1e9,
+                est_flop_count=1800 * 1e9, deadline=(i + 1) * 3600.0,
+            )
+        )
+    return jobs
+
+
+def _simulate(edf: bool) -> int:
+    """Run the client to completion in virtual time; count deadline misses."""
+    c = _make_client()
+    c.jobs = _queue()
+    now = 0.0
+    misses = 0
+    for _ in range(400):
+        if not c.jobs:
+            break
+        running = c.schedule(now)
+        if not running:
+            break
+        if not edf:
+            # WRR-only: force queue order (ignore the miss-driven ordering)
+            queued = [j for j in c.jobs if j.state != RunState.DONE]
+            for j in queued:
+                j.state = RunState.PREEMPTED if j is not queued[0] else j.state
+            running = queued[:1]
+            for j in running:
+                j.state = RunState.RUNNING
+            c.running = running
+        # advance to next completion
+        dt = min(j.remaining_estimate() for j in running)
+        dt = max(dt, 60.0)
+        done = c.advance(dt, now)
+        now += dt
+        for j in done:
+            if now > j.deadline:
+                misses += 1
+    return misses
+
+
+def run() -> None:
+    t0 = timer()
+    wrr_misses = _simulate(edf=False)
+    edf_misses = _simulate(edf=True)
+    wall = timer() - t0
+    emit(
+        "deadline_misses_wrr_vs_edf",
+        wall * 1e6,
+        (
+            f"wrr_misses={wrr_misses};wrr_edf_misses={edf_misses};"
+            f"paper_claim=edf_avoids_misses;pass={edf_misses < wrr_misses}"
+        ),
+    )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,47 @@
+"""Paper mechanism (§6.2): B_LO/B_HI buffering bounds the scheduler RPC rate
+while keeping processing resources busy through server outages."""
+from __future__ import annotations
+
+from .common import emit, make_project, submit_jobs, timer
+
+from repro.core import GridSimulation, make_population, reset_ids
+
+
+def _run(buffer_days):
+    reset_ids()
+    server = make_project(min_quorum=1)
+    pop = make_population(16, seed=2, availability=1.0)
+    sim = GridSimulation(server, pop, seed=4)
+    for c in sim.clients.values():
+        c.prefs.buffer_lo_days = buffer_days[0]
+        c.prefs.buffer_hi_days = buffer_days[1]
+    # steady-state: work never dries up
+    horizon = 2 * 86400.0
+    t = 0.0
+    while t < horizon:
+        sim.schedule_callback(t, lambda now: submit_jobs(
+            server, 600, est_flops=0.1 * 3600 * 16.5e9, now=now))
+        t += 3 * 3600.0
+    m = sim.run(horizon)
+    fetch_per_host_hour = m.rpcs_requesting_work / (16 * horizon / 3600.0)
+    return fetch_per_host_hour, m.idle_fraction
+
+
+def run() -> None:
+    t0 = timer()
+    small = _run((0.01, 0.02))  # tiny buffer: frequent RPCs
+    big = _run((0.2, 0.8))  # deep buffer: rare RPCs
+    wall = timer() - t0
+    emit(
+        "workfetch_rpc_rate",
+        wall * 1e6,
+        (
+            f"rpc_per_host_hour_small_buf={small[0]:.2f};big_buf={big[0]:.2f};"
+            f"idle_small={small[1]:.3f};idle_big={big[1]:.3f};"
+            f"paper_claim=buffering_cuts_rpc_rate;pass={big[0] <= small[0]}"
+        ),
+    )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,59 @@
+"""Benchmark harness: one function per paper table/claim.
+
+Prints ``name,us_per_call,derived`` CSV (one line per measurement). Claims
+and their paper sections:
+
+  bench_dispatch    S5.1/[17]  hundreds of dispatches per second; fast batch submit
+  bench_validation  S3.4       adaptive replication: overhead -> ~1, bounded errors
+  bench_allocation  S3.9       linear-bounded model minimizes small-batch turnaround
+  bench_scheduling  S6.1       EDF override avoids WRR deadline misses
+  bench_workfetch   S6.2       buffering bounds RPC rate
+  bench_credit      S7         device-neutral credit
+  bench_kernels     (TPU adaptation) Pallas kernels vs oracles
+  bench_grid_train  (TPU adaptation) end-to-end fault-tolerant grid training
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+
+def main() -> None:
+    from . import (
+        bench_allocation,
+        bench_credit,
+        bench_dispatch,
+        bench_grid_train,
+        bench_kernels,
+        bench_scheduling,
+        bench_validation,
+        bench_workfetch,
+    )
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod in (
+        bench_dispatch,
+        bench_validation,
+        bench_allocation,
+        bench_scheduling,
+        bench_workfetch,
+        bench_credit,
+        bench_kernels,
+        bench_grid_train,
+    ):
+        try:
+            mod.run()
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"{mod.__name__},0,FAILED")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Quickstart: create a BOINC project, submit jobs, run the volunteer grid.
+
+Builds a project server with replication validation, a 20-host heterogeneous
+volunteer population (5% flaky, 10% malicious), streams 200 jobs through the
+EmBOINC-style virtual-time simulator, and prints the ledger — everything the
+paper's middleware does, in ~30 lines of API.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.core import (
+    App,
+    AppVersion,
+    GridSimulation,
+    Job,
+    Platform,
+    ProjectServer,
+    default_cpu_plan_class,
+    fuzzy_comparator,
+    make_population,
+    next_id,
+    reset_ids,
+)
+
+
+def main() -> None:
+    reset_ids()
+    server = ProjectServer(name="quickstart", purge_delay=1e18)
+
+    app = App(
+        name="simulate",
+        min_quorum=2,  # replication-based validation (§3.4)
+        init_ninstances=2,
+        delay_bound=6 * 3600.0,  # straggler re-dispatch deadline (§4)
+        adaptive_replication=True,  # reputation lowers overhead toward 1x
+        comparator=fuzzy_comparator(rtol=1e-6, atol=1e-9),
+    )
+    for osn in ("windows", "mac", "linux"):
+        app.add_version(
+            AppVersion(
+                id=next_id("appver"),
+                app_name="simulate",
+                platform=Platform(osn, "x86_64"),
+                version_num=1,
+                plan_class=default_cpu_plan_class(),
+            )
+        )
+    server.add_app(app)
+
+    for _ in range(200):
+        server.submit_job(
+            Job(id=next_id("job"), app_name="simulate", est_flop_count=0.25 * 3600 * 16.5e9)
+        )
+
+    population = make_population(
+        20, seed=1, availability=0.8, error_prob=0.05, malicious_fraction=0.1
+    )
+    sim = GridSimulation(server, population, seed=7)
+    metrics = sim.run(horizon=3 * 86400.0)
+    sim.audit_validation()
+
+    counts = server.counts()
+    print(f"jobs completed:        {counts['jobs_success']}/200")
+    print(f"instances executed:    {metrics.instances_executed}")
+    print(f"replication overhead:  {metrics.replication_overhead:.2f}x")
+    print(f"corrupt results accepted: {metrics.wrong_accepted} (validation caught the rest)")
+    print(f"RPCs handled:          {metrics.rpcs}")
+    top = sorted(
+        ((k, v) for k, v in server.credit.total.items() if k.startswith("host:")),
+        key=lambda kv: -kv[1],
+    )[:3]
+    print("top credited hosts:    " + ", ".join(f"{k}={v:.2f}" for k, v in top))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""End-to-end driver: train a language model on the volunteer grid.
+
+Each optimizer step is decomposed into per-shard gradient jobs dispatched
+through the real BOINC scheduler to emulated hosts (virtual time, REAL JAX
+gradients). Hosts are unreliable: 5% flaky results, 10% malicious, 85%
+availability, permanent churn — the validator's gradient quorum keeps every
+accepted update correct, deadlines re-dispatch stragglers, and the credit
+system doubles as the FLOPs ledger.
+
+Default config trains a ~1M-param Qwen3-style model for 60 steps in a few
+minutes on CPU; pass ``--full`` for a ~100M-param run (hours on CPU — sized
+for a real machine).
+
+    PYTHONPATH=src python examples/train_volunteer_grid.py [--steps N] [--full]
+"""
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.configs import get_config, get_smoke_config
+from repro.core import reset_ids
+from repro.data import DataConfig
+from repro.optim import AdamWConfig
+from repro.runtime import GridTrainer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--hosts", type=int, default=10)
+    ap.add_argument("--full", action="store_true",
+                    help="~100M-param config (slow on CPU)")
+    args = ap.parse_args()
+
+    reset_ids()
+    if args.full:
+        # ~100M params: qwen3-family, 12 layers, d=512
+        cfg = get_config("qwen3-0.6b").scaled(
+            name="qwen3-100m", n_layers=12, d_model=512, n_heads=8,
+            n_kv_heads=4, head_dim=64, d_ff=1536, remat=False,
+        )
+        data = DataConfig(vocab=cfg.vocab, seq_len=256, batch_size=8, n_shards=4, seed=0)
+    else:
+        cfg = get_smoke_config("qwen3-0.6b").scaled(n_layers=4, d_model=128, d_ff=384)
+        data = DataConfig(vocab=cfg.vocab, seq_len=128, batch_size=8, n_shards=2, seed=0)
+
+    print(f"model: {cfg.name}  params={cfg.param_count()/1e6:.1f}M  "
+          f"tokens/step={data.batch_size * data.seq_len * data.n_shards}")
+
+    opt = AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=args.steps, schedule="cosine")
+    trainer = GridTrainer(
+        cfg, data, opt,
+        n_steps=args.steps,
+        n_hosts=args.hosts,
+        seed=0,
+        adaptive_replication=True,
+        error_prob=0.05,
+        malicious_fraction=0.10,
+        availability=0.85,
+        churn_rate=1.0 / (30 * 86400.0),
+    )
+    result = trainer.run()
+
+    print(f"\nsteps completed:      {result.steps_completed}/{args.steps}")
+    print(f"loss:                 {result.losses[0]:.4f} -> {result.final_loss:.4f}")
+    print(f"virtual time:         {result.virtual_time/3600.0:.1f} h")
+    print(f"instances executed:   {result.metrics.instances_executed}")
+    print(f"replication overhead: {result.metrics.replication_overhead:.2f}x")
+    print(f"corrupt grads accepted: {result.metrics.wrong_accepted}"
+          "  (adaptive replication trades a bounded error rate for ~1x overhead, §3.4;"
+          " set adaptive_replication=False for quorum-2 on every job -> zero)")
+    print(f"straggler retries:    {result.jobs_retried}")
+    n = 5
+    tail = ", ".join(f"{l:.3f}" for l in result.losses[-n:])
+    print(f"last {n} losses:        {tail}")
+
+
+if __name__ == "__main__":
+    main()

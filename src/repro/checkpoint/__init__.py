@@ -1,0 +1,3 @@
+from .checkpointer import Checkpointer, CheckpointPolicy
+
+__all__ = ["Checkpointer", "CheckpointPolicy"]

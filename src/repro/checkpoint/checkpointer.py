@@ -1,0 +1,160 @@
+"""Checkpoint/restart following the paper's application-checkpoint protocol
+(§3.6): the runtime *requests* a checkpoint every ``period`` steps; the
+training step completes its "outer loop" (the step boundary — our masked
+section: never mid-dispatch), writes atomically, and acknowledges. The
+client/coordinator knows which step is durable and never re-schedules work
+below it; restart resumes from the latest manifest.
+
+Storage is dependency-free: one .npz per pytree ("shard files") + a JSON
+manifest with step, config hash, and per-file checksums (the paper's file
+immutability + hash validation, §2.2/§3.10). Writes go to a temp name then
+rename (atomic on POSIX).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import time
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree: Any) -> List[Tuple[str, np.ndarray]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(_path_str(p) for p in path)
+        out.append((key, np.asarray(leaf)))
+    return out
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def _checksum(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+@dataclass
+class Checkpointer:
+    directory: str
+    keep: int = 3
+
+    def __post_init__(self) -> None:
+        os.makedirs(self.directory, exist_ok=True)
+
+    # ------------------------------------------------------------------
+
+    def save(self, step: int, trees: Dict[str, Any], meta: Optional[Dict] = None) -> str:
+        """Atomically write {name: pytree} at ``step``; returns ckpt dir."""
+        final = os.path.join(self.directory, f"step_{step:010d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        manifest: Dict[str, Any] = {
+            "step": step,
+            "time": time.time(),
+            "files": {},
+            "meta": meta or {},
+        }
+        for name, tree in trees.items():
+            arrays = dict(_flatten_with_paths(tree))
+            fpath = os.path.join(tmp, f"{name}.npz")
+            np.savez(fpath, **arrays)
+            manifest["files"][name] = {
+                "file": f"{name}.npz",
+                "sha256": _checksum(fpath),
+                "n_arrays": len(arrays),
+            }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=2)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        self._gc()
+        return final
+
+    # ------------------------------------------------------------------
+
+    def latest_step(self) -> Optional[int]:
+        steps = self._steps()
+        return steps[-1] if steps else None
+
+    def restore(
+        self, templates: Dict[str, Any], step: Optional[int] = None
+    ) -> Tuple[int, Dict[str, Any]]:
+        """Restore {name: pytree} using ``templates`` for structure/dtypes.
+        Verifies checksums (hash validation of downloaded files, §2.2)."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.directory}")
+        d = os.path.join(self.directory, f"step_{step:010d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        out: Dict[str, Any] = {}
+        for name, template in templates.items():
+            entry = manifest["files"][name]
+            fpath = os.path.join(d, entry["file"])
+            if _checksum(fpath) != entry["sha256"]:
+                raise IOError(f"checksum mismatch for {fpath}")
+            data = np.load(fpath)
+            flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+            leaves = []
+            for path, leaf in flat:
+                key = "/".join(_path_str(p) for p in path)
+                arr = data[key]
+                leaves.append(arr.astype(np.asarray(leaf).dtype))
+            out[name] = jax.tree_util.tree_unflatten(
+                jax.tree_util.tree_structure(template), leaves
+            )
+        return manifest["step"], out
+
+    # ------------------------------------------------------------------
+
+    def _steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.directory):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                try:
+                    out.append(int(name[5:]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def _gc(self) -> None:
+        steps = self._steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:010d}"), ignore_errors=True)
+
+
+@dataclass
+class CheckpointPolicy:
+    """The client-side checkpoint request cadence (§3.6)."""
+
+    period_steps: int = 50
+    last_requested: int = -1
+    last_acked: int = -1
+
+    def should_checkpoint(self, step: int) -> bool:
+        return step > 0 and step % self.period_steps == 0
+
+    def ack(self, step: int) -> None:
+        self.last_acked = step

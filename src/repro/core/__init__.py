@@ -1,0 +1,113 @@
+"""BOINC core middleware: the paper's primary contribution, in Python/JAX.
+
+Layout (paper section in parens):
+  types        — projects/hosts/apps/app-versions/plan-classes/jobs (§2, §3)
+  backoff      — exponential backoff (§2.2)
+  keywords     — keyword hierarchies & prefs (§2.4)
+  store        — the job database + ID-space daemon sharding (§5.1)
+  fsm          — transitioner: job lifecycle FSM (§4)
+  validator    — replication validation, HR classes (§3.4)
+  adaptive     — adaptive replication reputations (§3.4)
+  estimation   — runtime estimation / proj_flops (§6.3)
+  credit       — PFC credit + normalizations + cross-project (§7)
+  allocation   — linear-bounded allocation model (§3.9)
+  scheduler    — feeder, job cache, dispatch policy (§5.1, §6.4)
+  client       — WRR/EDF resource scheduling + work fetch (§6.1–6.2)
+  server       — project-server facade w/ daemon set (§5.1)
+  simulator    — EmBOINC-style virtual-time emulator (§9)
+"""
+from .adaptive import AdaptiveReplication
+from .allocation import LinearBoundedAllocator
+from .backoff import ExponentialBackoff
+from .client import Client, ClientJob, ClientPrefs, ClientResource, ProjectAttachment
+from .coordinator import AMReply, Coordinator, VettedProject
+from .credit import CreditSystem, peak_flop_count
+from .estimation import RuntimeEstimator
+from .fsm import Transitioner
+from .keywords import KeywordPrefs, keyword_score
+from .scheduler import (
+    CompletedResult,
+    Feeder,
+    ResourceRequest,
+    ScheduleReply,
+    ScheduleRequest,
+    Scheduler,
+)
+from .server import ProjectServer
+from .simulator import GridSimulation, HostSpec, make_population
+from .store import JobStore
+from .types import (
+    App,
+    AppVersion,
+    Batch,
+    HRLevel,
+    Host,
+    InstanceOutcome,
+    InstanceState,
+    Job,
+    JobInstance,
+    JobState,
+    Platform,
+    PlanClass,
+    ProcessingResource,
+    ResourceType,
+    ValidateState,
+    default_cpu_plan_class,
+    gpu_plan_class,
+    hr_class,
+    next_id,
+    reset_ids,
+)
+from .validator import bitwise_equal, check_set, fuzzy_comparator
+
+__all__ = [
+    "AdaptiveReplication",
+    "App",
+    "AppVersion",
+    "Batch",
+    "Client",
+    "ClientJob",
+    "ClientPrefs",
+    "ClientResource",
+    "CompletedResult",
+    "Coordinator",
+    "CreditSystem",
+    "ExponentialBackoff",
+    "Feeder",
+    "GridSimulation",
+    "HRLevel",
+    "Host",
+    "HostSpec",
+    "InstanceOutcome",
+    "InstanceState",
+    "Job",
+    "JobInstance",
+    "JobState",
+    "JobStore",
+    "KeywordPrefs",
+    "LinearBoundedAllocator",
+    "Platform",
+    "PlanClass",
+    "ProcessingResource",
+    "ProjectAttachment",
+    "ProjectServer",
+    "ResourceRequest",
+    "ResourceType",
+    "RuntimeEstimator",
+    "ScheduleReply",
+    "ScheduleRequest",
+    "Scheduler",
+    "Transitioner",
+    "ValidateState",
+    "bitwise_equal",
+    "check_set",
+    "default_cpu_plan_class",
+    "fuzzy_comparator",
+    "gpu_plan_class",
+    "hr_class",
+    "keyword_score",
+    "make_population",
+    "next_id",
+    "peak_flop_count",
+    "reset_ids",
+]

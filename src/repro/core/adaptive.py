@@ -1,0 +1,62 @@
+"""Adaptive replication (§3.4).
+
+"The BOINC server maintains, for each (host, app version) pair, a count N of
+the number of consecutive jobs that were validated by replication. Once N
+exceeds a threshold, jobs sent to that host with that app version are
+replicated only some of the time; the probability of replication goes to
+zero as N increases. Adaptive replication can achieve a low bound on the
+error rate ... while imposing only a small throughput overhead."
+
+Reputation is kept at (host, app version) granularity because "some
+computers are reliable for CPU jobs but unreliable for GPU jobs".
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import Dict, Tuple
+
+
+@dataclass
+class AdaptiveReplication:
+    """Per-(host, app-version) reputation and replication decisions."""
+
+    threshold: int = 10  # N must exceed this before replication is relaxed
+    min_probability: float = 0.01  # floor: spot checks never fully stop
+    seed: int = 0
+    consecutive_valid: Dict[Tuple[int, int], int] = field(default_factory=dict)
+    _rng: random.Random = field(default=None, repr=False)  # type: ignore[assignment]
+
+    def __post_init__(self) -> None:
+        self._rng = random.Random(self.seed)
+
+    def key(self, host_id: int, app_version_id: int) -> Tuple[int, int]:
+        return (host_id, app_version_id)
+
+    def reputation(self, host_id: int, app_version_id: int) -> int:
+        return self.consecutive_valid.get(self.key(host_id, app_version_id), 0)
+
+    def replication_probability(self, host_id: int, app_version_id: int) -> float:
+        """P(replicate a job sent to this host with this version)."""
+        n = self.reputation(host_id, app_version_id)
+        if n <= self.threshold:
+            return 1.0
+        # goes to zero as N increases, floored at min_probability
+        return max(self.min_probability, self.threshold / float(n))
+
+    def should_replicate(self, host_id: int, app_version_id: int) -> bool:
+        p = self.replication_probability(host_id, app_version_id)
+        return self._rng.random() < p
+
+    def on_validated(self, host_id: int, app_version_id: int) -> None:
+        k = self.key(host_id, app_version_id)
+        self.consecutive_valid[k] = self.consecutive_valid.get(k, 0) + 1
+
+    def on_invalid(self, host_id: int, app_version_id: int) -> None:
+        """Any invalid/errored result resets reputation to zero."""
+        self.consecutive_valid[self.key(host_id, app_version_id)] = 0
+
+    def expected_overhead(self, host_id: int, app_version_id: int) -> float:
+        """Expected replication factor for this pair: 1 + p (one extra
+        instance with probability p). The paper's claim is this -> ~1."""
+        return 1.0 + self.replication_probability(host_id, app_version_id)

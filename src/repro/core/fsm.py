@@ -1,0 +1,272 @@
+"""The transitioner: the job-lifecycle finite-state machine (§4, §5.1).
+
+"Viewing the progress of a job as a finite-state machine, this handles the
+transitions. The events that trigger transitions come from potentially
+concurrent processes like schedulers and validators. Instead of handling the
+transitions, these programs set a flag in the job's database record. The
+transitioner enumerates these records and processes them. This eliminates
+the need for concurrency control of DB access."
+
+Responsibilities per job (§4):
+  * create the initial ``init_ninstances`` instances;
+  * on deadline pass, mark instances NO_REPLY and create replacements;
+  * trigger validation at quorum; designate the canonical instance;
+  * grant credit (via the credit system) to valid instances;
+  * cancel unsent instances once a canonical instance exists;
+  * enforce max_error_instances / max_success_instances;
+  * mark jobs for assimilation/file-deletion/purge.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from .adaptive import AdaptiveReplication
+from .credit import CreditSystem
+from .store import JobStore
+from .types import (
+    App,
+    InstanceOutcome,
+    InstanceState,
+    Job,
+    JobInstance,
+    JobState,
+    ValidateState,
+)
+from .validator import check_set, validate_against_canonical
+
+
+@dataclass
+class TransitionerMetrics:
+    timeouts: int = 0
+    retries_created: int = 0
+    jobs_validated: int = 0
+    jobs_failed: int = 0
+    instances_cancelled: int = 0
+    credit_granted: float = 0.0
+
+
+@dataclass
+class Transitioner:
+    """Drives job state transitions against a JobStore (§5.1).
+
+    ``instance``/``n_instances`` implement ID-space daemon sharding.
+    """
+
+    store: JobStore
+    credit: Optional[CreditSystem] = None
+    adaptive: Optional[AdaptiveReplication] = None
+    instance: int = 0
+    n_instances: int = 1
+    metrics: TransitionerMetrics = field(default_factory=TransitionerMetrics)
+
+    # ------------------------------------------------------------------
+
+    def tick(self, now: float) -> int:
+        """One daemon pass: handle deadline misses, then flagged jobs.
+
+        Returns the number of jobs transitioned.
+        """
+        self._check_deadlines(now)
+        n = 0
+        for job in list(self.store.jobs_with_flag()):
+            if job.id % self.n_instances != self.instance:
+                continue
+            job.transition_flag = False
+            self._transition(job, now)
+            n += 1
+        return n
+
+    # ------------------------------------------------------------------
+
+    def _check_deadlines(self, now: float) -> None:
+        """Instances past deadline are assumed lost (§4)."""
+        for inst in self.store.instances.values():
+            if inst.state == InstanceState.IN_PROGRESS and now > inst.deadline > 0:
+                inst.state = InstanceState.OVER
+                inst.outcome = InstanceOutcome.NO_REPLY
+                self.metrics.timeouts += 1
+                job = self.store.jobs.get(inst.job_id)
+                if job is not None:
+                    job.transition_flag = True
+                if self.adaptive is not None and inst.host_id is not None \
+                        and inst.app_version_id is not None:
+                    self.adaptive.on_invalid(inst.host_id, inst.app_version_id)
+
+    # ------------------------------------------------------------------
+
+    def _transition(self, job: Job, now: float) -> None:
+        app = self.store.apps[job.app_name]
+        insts = self.store.job_instances(job.id)
+
+        n_outstanding = sum(1 for i in insts if i.is_outstanding())
+        successes = [
+            i
+            for i in insts
+            if i.state == InstanceState.OVER and i.outcome == InstanceOutcome.SUCCESS
+        ]
+        n_error = sum(
+            1
+            for i in insts
+            if i.state == InstanceState.OVER
+            and i.outcome
+            in (
+                InstanceOutcome.CLIENT_ERROR,
+                InstanceOutcome.NO_REPLY,
+                InstanceOutcome.ABANDONED,
+                InstanceOutcome.VALIDATE_ERROR,
+            )
+        )
+
+        # -- failure limits (§4) --
+        if n_error > job.max_error_instances:
+            self._fail_job(job, "too many errored instances")
+            return
+
+        # -- validation (§4) --
+        if job.canonical_instance_id is None:
+            fresh = [s for s in successes if s.validate_state == ValidateState.INIT]
+            quorum = self._required_quorum(job)
+            if len(successes) >= quorum and fresh:
+                self._validate(job, app, successes, now)
+                if job.state != JobState.ACTIVE:
+                    return
+            if job.canonical_instance_id is None and len(successes) > job.max_success_instances:
+                self._fail_job(job, "too many successes without consensus")
+                return
+        else:
+            # late-arriving successes validate against the canonical (§4)
+            canonical = self.store.instances.get(job.canonical_instance_id)
+            if canonical is not None:
+                for s in successes:
+                    if s.id != canonical.id and s.validate_state == ValidateState.INIT:
+                        ok = validate_against_canonical(s, canonical, app.comparator)
+                        self._post_validation_updates(
+                            job, app, [s] if ok else [], [] if ok else [s], now,
+                            by_replication=True,
+                        )
+
+        if job.state != JobState.ACTIVE:
+            return
+
+        # -- instance top-up (§4) --
+        if job.canonical_instance_id is None:
+            target = self._target_instances(job, insts)
+            # Count outstanding plus the largest mutually-agreeing group of
+            # successes: "if the outputs agree, they are accepted ...
+            # otherwise a third instance is created and run" (§3.4). Two
+            # disagreeing successes contribute 1, forcing a tie-breaker.
+            live = n_outstanding + self._largest_agreeing_group(app, successes)
+            total_created = len(insts)
+            while live < target:
+                # cap total instance creation to avoid unbounded retry loops
+                if total_created >= job.max_error_instances + job.max_success_instances + 1:
+                    break
+                self.store.create_instance(job)
+                if total_created >= job.init_ninstances:
+                    self.metrics.retries_created += 1
+                live += 1
+                total_created += 1
+        else:
+            # canonical exists: cancel unsent instances (§4)
+            for i in insts:
+                if i.state == InstanceState.UNSENT:
+                    i.state = InstanceState.OVER
+                    i.outcome = InstanceOutcome.CANCELLED
+                    self.metrics.instances_cancelled += 1
+            outstanding = [i for i in insts if i.is_outstanding()]
+            if not outstanding and not job.assimilated:
+                # all resolved: output files of canonical may now be purged
+                pass
+
+    # ------------------------------------------------------------------
+
+    def _required_quorum(self, job: Job) -> int:
+        """Adaptive replication (§3.4): unreplicated jobs have quorum 1."""
+        return job.min_quorum
+
+    def _target_instances(self, job: Job, insts: List[JobInstance]) -> int:
+        if not insts:
+            return job.init_ninstances
+        return job.min_quorum
+
+    @staticmethod
+    def _largest_agreeing_group(app: App, successes: List[JobInstance]) -> int:
+        from .validator import bitwise_equal
+
+        viable = [s for s in successes if s.validate_state != ValidateState.INVALID]
+        if len(viable) <= 1:
+            return len(viable)
+        cmp = app.comparator or bitwise_equal
+        groups: List[List[JobInstance]] = []
+        for inst in viable:
+            for g in groups:
+                if cmp(g[0].output, inst.output):
+                    g.append(inst)
+                    break
+            else:
+                groups.append([inst])
+        return max(len(g) for g in groups)
+
+    # ------------------------------------------------------------------
+
+    def _validate(self, job: Job, app: App, successes: List[JobInstance], now: float) -> None:
+        result = check_set(successes, app.comparator, self._required_quorum(job))
+        if result.canonical is None:
+            return  # inconclusive; transitioner will top up instances
+        job.canonical_instance_id = result.canonical.id
+        self.metrics.jobs_validated += 1
+        self._post_validation_updates(
+            job, app, result.valid, result.invalid, now,
+            by_replication=len(successes) >= 2,
+        )
+        job.state = JobState.SUCCESS
+        job.transition_flag = True
+
+    def _post_validation_updates(
+        self,
+        job: Job,
+        app: App,
+        valid: List[JobInstance],
+        invalid: List[JobInstance],
+        now: float,
+        by_replication: bool = True,
+    ) -> None:
+        # adaptive-replication reputation (§3.4): N counts only jobs
+        # "validated by replication" — trusted singletons don't build it.
+        if self.adaptive is not None:
+            if by_replication:
+                for i in valid:
+                    if i.host_id is not None and i.app_version_id is not None:
+                        self.adaptive.on_validated(i.host_id, i.app_version_id)
+            for i in invalid:
+                if i.host_id is not None and i.app_version_id is not None:
+                    self.adaptive.on_invalid(i.host_id, i.app_version_id)
+                i.outcome = InstanceOutcome.VALIDATE_ERROR
+
+        # credit (§7): grant the outlier-robust average to all valid instances
+        if self.credit is not None and valid:
+            peer_vids = [v.id for v in self.store.apps[job.app_name].latest_versions()]
+            claims = []
+            for i in valid:
+                self.credit.record(i, job)
+                i.claimed_credit = self.credit.claimed_credit(i, peer_vids)
+                claims.append(i.claimed_credit)
+            grant = CreditSystem.grant_amount(claims)
+            for i in valid:
+                i.granted_credit = grant
+                host = self.store.hosts.get(i.host_id) if i.host_id else None
+                self.credit.grant(f"host:{i.host_id}", grant, now)
+                if host is not None:
+                    self.credit.grant(f"volunteer:{host.volunteer_id}", grant, now)
+                self.metrics.credit_granted += grant
+
+    def _fail_job(self, job: Job, reason: str) -> None:
+        job.state = JobState.FAILURE
+        job.error_mask |= 1
+        self.metrics.jobs_failed += 1
+        # cancel any unsent instances
+        for i in self.store.job_instances(job.id):
+            if i.state == InstanceState.UNSENT:
+                i.state = InstanceState.OVER
+                i.outcome = InstanceOutcome.CANCELLED

@@ -1,0 +1,501 @@
+"""Server-side job dispatch (§5.1 server architecture, §6.3–6.4 policy).
+
+Architecture (§5.1): scheduler instances never scan the DB for dispatchable
+work; a shared-memory **job cache** of ~1000 unsent instances is replenished
+by a **feeder** daemon. The scheduler scans the cache (random start point to
+reduce lock conflict), scores candidates, re-checks under a mutex ("fast
+check"), then against the DB ("slow check"), and builds the reply. This is
+what lets one server dispatch hundreds of jobs per second [paper ref 17] —
+reproduced in ``benchmarks/bench_dispatch.py``.
+
+Policy (§6.4): GPUs handled first; app-version selection by max
+``proj_flops`` among (platform, plan-class, HR)-compatible versions; score =
+weighted sum of keyword match, submitter allocation balance, skipped-before,
+locality, size-quantile match; fast checks = disk / deadline-feasibility /
+duplicate-in-reply; slow checks = one-instance-per-volunteer / job errored /
+HR class.
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from .adaptive import AdaptiveReplication
+from .allocation import LinearBoundedAllocator
+from .estimation import RuntimeEstimator
+from .keywords import KeywordPrefs, keyword_score
+from .store import JobStore
+from .types import (
+    App,
+    AppVersion,
+    HRLevel,
+    Host,
+    InstanceOutcome,
+    InstanceState,
+    Job,
+    JobInstance,
+    ResourceType,
+    hr_class,
+)
+
+# ---------------------------------------------------------------------------
+# RPC messages (§6.2, §6.4)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ResourceRequest:
+    """Per-processing-resource work request (§6.2)."""
+
+    req_runtime: float = 0.0  # buffer shortfall, scaled seconds
+    req_idle: float = 0.0  # idle instance count
+    queue_dur: float = 0.0  # remaining scaled runtime of queued jobs
+
+
+@dataclass
+class CompletedResult:
+    """A finished instance reported by the client."""
+
+    instance_id: int
+    outcome: InstanceOutcome
+    runtime: float = 0.0
+    peak_flop_count: float = 0.0
+    output: Any = None
+    exit_code: int = 0
+    stderr: str = ""
+
+
+@dataclass
+class TrickleUp:
+    """Partial-progress message from a running app (§3.5): conveyed
+    immediately and handled by project-specific logic — e.g. partial credit
+    for long jobs, or streamed training metrics in the grid runtime."""
+
+    instance_id: int
+    fraction_done: float
+    payload: Any = None
+
+
+@dataclass
+class ScheduleRequest:
+    host_id: int
+    requests: Dict[ResourceType, ResourceRequest] = field(default_factory=dict)
+    completed: List[CompletedResult] = field(default_factory=list)
+    trickles: List[TrickleUp] = field(default_factory=list)
+    sticky_files: Tuple[str, ...] = ()
+    usable_disk: float = 1e12
+    keyword_prefs: KeywordPrefs = field(default_factory=KeywordPrefs)
+    # anonymous platform (§3.2): client-supplied app versions
+    anonymous_versions: List[AppVersion] = field(default_factory=list)
+
+
+@dataclass
+class DispatchedJob:
+    job: Job
+    instance: JobInstance
+    version: AppVersion
+    est_flops: float  # server's FLOPS estimate for the program (§6.4)
+    est_runtime: float
+
+
+@dataclass
+class ScheduleReply:
+    jobs: List[DispatchedJob] = field(default_factory=list)
+    delete_sticky: List[str] = field(default_factory=list)
+    request_delay: float = 0.0
+
+
+# ---------------------------------------------------------------------------
+# Feeder + shared-memory job cache (§5.1)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class CacheSlot:
+    instance_id: int
+    job_id: int
+    app_name: str
+    taken: bool = False
+    skipped: int = 0  # times passed over by a scheduler scan (§6.4 score)
+
+
+@dataclass
+class Feeder:
+    """Replenishes the job cache from the store (§5.1), interleaving apps
+    and size classes so all categories stay represented."""
+
+    store: JobStore
+    cache_size: int = 1024
+    slots: List[Optional[CacheSlot]] = field(default_factory=list)
+
+    def __post_init__(self) -> None:
+        if not self.slots:
+            self.slots = [None] * self.cache_size
+
+    def fill(self) -> int:
+        """One feeder pass; returns slots filled."""
+        in_cache = {s.instance_id for s in self.slots if s is not None}
+        vacancies = [i for i, s in enumerate(self.slots) if s is None or self._stale(s)]
+        if not vacancies:
+            return 0
+        per_app: Dict[str, List[JobInstance]] = {}
+        for app_name in self.store.apps:
+            per_app[app_name] = [
+                inst
+                for inst in self.store.unsent_instances(app_name, limit=len(vacancies))
+                if inst.id not in in_cache
+            ]
+        filled = 0
+        app_names = [a for a in per_app if per_app[a]]
+        ai = 0
+        for slot_idx in vacancies:
+            while app_names and not per_app[app_names[ai % len(app_names)]]:
+                app_names.pop(ai % len(app_names))
+            if not app_names:
+                break
+            app_name = app_names[ai % len(app_names)]
+            inst = per_app[app_name].pop(0)
+            self.slots[slot_idx] = CacheSlot(
+                instance_id=inst.id, job_id=inst.job_id, app_name=app_name
+            )
+            in_cache.add(inst.id)
+            filled += 1
+            ai += 1
+        return filled
+
+    def _stale(self, slot: CacheSlot) -> bool:
+        inst = self.store.instances.get(slot.instance_id)
+        return inst is None or inst.state != InstanceState.UNSENT
+
+    def clear_slot(self, instance_id: int) -> None:
+        for i, s in enumerate(self.slots):
+            if s is not None and s.instance_id == instance_id:
+                self.slots[i] = None
+                return
+
+
+# ---------------------------------------------------------------------------
+# Scheduler (§6.4)
+# ---------------------------------------------------------------------------
+
+_RESOURCE_ORDER = (ResourceType.TPU, ResourceType.GPU, ResourceType.CPU)  # GPUs first (§6.4)
+
+# score weights (§6.4 "weighted sum of several factors")
+W_KEYWORD = 10.0
+W_BALANCE = 1.0
+W_SKIPPED = 5.0
+W_LOCALITY = 20.0
+W_SIZE_MATCH = 8.0
+W_PRIORITY = 1.0
+
+
+@dataclass
+class SchedulerMetrics:
+    requests: int = 0
+    dispatched: int = 0
+    reported: int = 0
+    fast_check_rejects: int = 0
+    slow_check_rejects: int = 0
+    cache_misses: int = 0
+
+
+@dataclass
+class Scheduler:
+    store: JobStore
+    feeder: Feeder
+    estimator: RuntimeEstimator
+    allocator: Optional[LinearBoundedAllocator] = None
+    adaptive: Optional[AdaptiveReplication] = None
+    seed: int = 0
+    metrics: SchedulerMetrics = field(default_factory=SchedulerMetrics)
+    _rng: random.Random = field(default=None, repr=False)  # type: ignore[assignment]
+
+    def __post_init__(self) -> None:
+        self._rng = random.Random(self.seed)
+
+    # ------------------------------------------------------------------
+
+    def handle_request(self, req: ScheduleRequest, now: float) -> ScheduleReply:
+        self.metrics.requests += 1
+        host = self.store.hosts.get(req.host_id)
+        reply = ScheduleReply()
+        if host is None:
+            reply.request_delay = 3600.0
+            return reply
+
+        self._process_completed(req, host, now)
+
+        disk_left = req.usable_disk
+        if disk_left < 0:
+            # over limit: direct the client to delete sticky files (§3.10)
+            reply.delete_sticky = list(req.sticky_files)
+            return reply
+
+        for rtype in _RESOURCE_ORDER:
+            rreq = req.requests.get(rtype)
+            if rreq is None or (rreq.req_runtime <= 0 and rreq.req_idle <= 0):
+                continue
+            disk_left = self._dispatch_resource(
+                host, req, rtype, rreq, reply, disk_left, now
+            )
+        return reply
+
+    # ------------------------------------------------------------------
+
+    def _process_completed(self, req: ScheduleRequest, host: Host, now: float) -> None:
+        """Report path: completed instances update the DB + estimators."""
+        for c in req.completed:
+            inst = self.store.instances.get(c.instance_id)
+            if inst is None or inst.state == InstanceState.OVER:
+                continue
+            inst.state = InstanceState.OVER
+            inst.outcome = c.outcome
+            inst.received_time = now
+            inst.runtime = c.runtime
+            inst.peak_flop_count = c.peak_flop_count
+            inst.output = c.output
+            inst.exit_code = c.exit_code
+            inst.stderr = c.stderr
+            self.metrics.reported += 1
+            job = self.store.jobs.get(inst.job_id)
+            if job is not None:
+                job.transition_flag = True
+                version = self.store.app_versions.get(inst.app_version_id or -1)
+                if version is not None and c.outcome == InstanceOutcome.SUCCESS:
+                    self.estimator.record(host, version, job, c.runtime)
+                if self.adaptive is not None and c.outcome != InstanceOutcome.SUCCESS \
+                        and inst.app_version_id is not None:
+                    self.adaptive.on_invalid(host.id, inst.app_version_id)
+                # debit the submitter's allocation balance (§3.9)
+                if self.allocator is not None and c.runtime > 0:
+                    self.allocator.debit(job.submitter, c.runtime, now)
+
+    # ------------------------------------------------------------------
+
+    def _dispatch_resource(
+        self,
+        host: Host,
+        req: ScheduleRequest,
+        rtype: ResourceType,
+        rreq: ResourceRequest,
+        reply: ScheduleReply,
+        disk_left: float,
+        now: float,
+    ) -> float:
+        candidates = self._candidate_list(host, req, rtype, now)
+        queue_dur = rreq.queue_dur
+        req_runtime = rreq.req_runtime
+        req_idle = rreq.req_idle
+        sending_jobs = {d.job.id for d in reply.jobs}
+
+        for score, slot, job, version, usage in candidates:
+            inst = self.store.instances.get(slot.instance_id)
+            # fast check (§6.4): still unsent? (another scheduler may have taken it)
+            if inst is None or inst.state != InstanceState.UNSENT or slot.taken:
+                self.metrics.cache_misses += 1
+                continue
+            est_rt = self.estimator.est_runtime(job, host, version)
+            scaled_rt = self._scale_runtime(est_rt, host, rtype)
+            if job.disk_bytes > disk_left:
+                self.metrics.fast_check_rejects += 1
+                slot.skipped += 1
+                continue
+            if queue_dur + scaled_rt > job.delay_bound:
+                # probably won't make the deadline (§6.4 fast check b)
+                self.metrics.fast_check_rejects += 1
+                slot.skipped += 1
+                continue
+            if job.id in sending_jobs:
+                self.metrics.fast_check_rejects += 1
+                continue
+
+            slot.taken = True
+            # slow check (§6.4): DB-level conditions
+            if not self._slow_check(job, host):
+                slot.taken = False
+                self.metrics.slow_check_rejects += 1
+                slot.skipped += 1
+                continue
+
+            self._dispatch(job, inst, host, version, now, reply, est_rt)
+            sending_jobs.add(job.id)
+            self.feeder.clear_slot(inst.id)
+            disk_left -= job.disk_bytes
+            queue_dur += scaled_rt
+            req_runtime -= scaled_rt
+            req_idle -= usage.get(rtype, 0.0)
+            if req_runtime <= 0 and req_idle <= 0:
+                break
+        return disk_left
+
+    # ------------------------------------------------------------------
+
+    def _candidate_list(
+        self, host: Host, req: ScheduleRequest, rtype: ResourceType, now: float
+    ):
+        """Scan the job cache from a random start; score candidates (§6.4)."""
+        slots = self.feeder.slots
+        n = len(slots)
+        start = self._rng.randrange(n) if n else 0
+        out = []
+        seen_jobs = set()
+        for k in range(n):
+            slot = slots[(start + k) % n]
+            if slot is None or slot.taken:
+                continue
+            job = self.store.jobs.get(slot.job_id)
+            if job is None or slot.job_id in seen_jobs:
+                continue
+            app = self.store.apps[job.app_name]
+            if job.target_host is not None and job.target_host != host.id:
+                continue  # targeted jobs (§3.5)
+            version, usage = self._select_version(app, job, host, req, rtype)
+            if version is None:
+                continue
+            score = self._score(job, app, host, req, version, rtype, now)
+            if score is None:
+                continue
+            seen_jobs.add(slot.job_id)
+            out.append((score, slot, job, version, usage))
+        out.sort(key=lambda t: -t[0])
+        return out
+
+    # ------------------------------------------------------------------
+
+    def _select_version(
+        self,
+        app: App,
+        job: Job,
+        host: Host,
+        req: ScheduleRequest,
+        rtype: ResourceType,
+    ) -> Tuple[Optional[AppVersion], Dict[ResourceType, float]]:
+        """Best app version for (job, host, resource) by proj_flops (§6.4)."""
+        pool = list(app.latest_versions())
+        if req.anonymous_versions:
+            # anonymous platform (§3.2): client-built versions take part
+            pool += [v for v in req.anonymous_versions if v.app_name == app.name]
+        best: Optional[AppVersion] = None
+        best_usage: Dict[ResourceType, float] = {}
+        best_pf = -1.0
+        for v in pool:
+            if job.pinned_version_num is not None and v.version_num != job.pinned_version_num:
+                continue  # version pinning (§3.5)
+            if job.hav_version_id is not None and v.id != job.hav_version_id:
+                continue  # homogeneous app version (§3.4)
+            if not host.supports_platform(v.platform):
+                continue
+            ev = v.plan_class.evaluate(host)
+            if ev is None:
+                continue
+            usage, _ = ev
+            if usage.get(rtype, 0.0) <= 0.0:
+                continue  # version doesn't use this resource
+            pf = self.estimator.proj_flops(host, v)
+            if pf > best_pf:
+                best, best_usage, best_pf = v, usage, pf
+        return best, best_usage
+
+    # ------------------------------------------------------------------
+
+    def _score(
+        self,
+        job: Job,
+        app: App,
+        host: Host,
+        req: ScheduleRequest,
+        version: AppVersion,
+        rtype: ResourceType,
+        now: float,
+    ) -> Optional[float]:
+        # HR constraint: job locked to an equivalence class (§3.4)
+        if app.hr_level != HRLevel.NONE and job.hr_class is not None:
+            if hr_class(host, app.hr_level) != job.hr_class:
+                return None
+        kscore = keyword_score(job.keywords, req.keyword_prefs)
+        if kscore is None:
+            return None  # "no" keyword: never send (§2.4)
+        score = W_KEYWORD * kscore
+        if self.allocator is not None:
+            score += W_BALANCE * self.allocator.priority(job.submitter, now)
+        score += W_PRIORITY * job.priority
+        # skipped-before boost: hard-to-send jobs go while they can (§6.4)
+        slot_skips = 0
+        for s in self.feeder.slots:
+            if s is not None and s.job_id == job.id:
+                slot_skips = s.skipped
+                break
+        score += W_SKIPPED * min(slot_skips, 5)
+        # locality scheduling (§3.5): prefer jobs whose files are resident
+        if app.uses_locality and job.input_files:
+            resident = len(set(job.input_files) & set(req.sticky_files))
+            score += W_LOCALITY * (resident / len(job.input_files))
+        # multi-size jobs (§3.5): match job size class to host speed quantile
+        if app.multi_size and app.n_size_classes > 1:
+            all_pf = [st.mean for st in self.estimator.version.values() if st.n > 0]
+            pop = [1.0 / m for m in all_pf if m > 0]
+            q = self.estimator.size_quantile(host, version, app.n_size_classes, pop)
+            if q == job.size_class:
+                score += W_SIZE_MATCH
+        return score
+
+    # ------------------------------------------------------------------
+
+    def _slow_check(self, job: Job, host: Host) -> bool:
+        if job.state.value != "active":
+            return False  # errored out since we considered it
+        if self.store.host_has_instance_of_job(host.id, job.id):
+            return False  # one instance per volunteer (§6.4)
+        return True
+
+    # ------------------------------------------------------------------
+
+    def _dispatch(
+        self,
+        job: Job,
+        inst: JobInstance,
+        host: Host,
+        version: AppVersion,
+        now: float,
+        reply: ScheduleReply,
+        est_rt: float,
+    ) -> None:
+        app = self.store.apps[job.app_name]
+        inst.state = InstanceState.IN_PROGRESS
+        inst.host_id = host.id
+        inst.app_version_id = version.id
+        inst.sent_time = now
+        inst.deadline = now + job.delay_bound
+        # lock HR class / app version on first dispatch (§3.4)
+        if app.hr_level != HRLevel.NONE and job.hr_class is None:
+            job.hr_class = hr_class(host, app.hr_level)
+        if app.homogeneous_app_version and job.hav_version_id is None:
+            job.hav_version_id = version.id
+        # adaptive replication decision (§3.4): replicate this host's job?
+        if app.adaptive_replication and job.min_quorum <= 1:
+            if self.adaptive is not None and self.adaptive.should_replicate(host.id, version.id):
+                job.min_quorum = app.min_quorum
+                job.init_ninstances = max(job.init_ninstances, app.min_quorum)
+                job.transition_flag = True  # transitioner creates the replica
+        self.metrics.dispatched += 1
+        reply.jobs.append(
+            DispatchedJob(
+                job=job,
+                instance=inst,
+                version=version,
+                est_flops=self.estimator.proj_flops(host, version),
+                est_runtime=est_rt,
+            )
+        )
+
+    # ------------------------------------------------------------------
+
+    @staticmethod
+    def _scale_runtime(raw: float, host: Host, rtype: ResourceType) -> float:
+        """Raw -> scaled runtime using availability (§6)."""
+        res = host.resources.get(rtype)
+        avail = (res.availability if res else 1.0) * host.on_fraction
+        if avail <= 0:
+            return float("inf")
+        return raw / avail

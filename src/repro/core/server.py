@@ -1,0 +1,243 @@
+"""The project server facade (§5.1).
+
+Wires the store, feeder, scheduler instances, and the daemon set
+(transitioner, validator — folded into the transitioner's quorum step as in
+the paper's flow, assimilator, file deleter, database purger). Daemons are
+independent ``tick`` callables; any can be paused and its work accumulates
+in the store (the paper's fault-tolerance property — exercised by tests).
+
+Scale-out (§5.1): every daemon supports ID-space sharding; scheduler
+instances share the feeder cache.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+from .adaptive import AdaptiveReplication
+from .allocation import LinearBoundedAllocator
+from .credit import CreditSystem
+from .estimation import RuntimeEstimator
+from .fsm import Transitioner
+from .scheduler import Feeder, Scheduler, ScheduleReply, ScheduleRequest, TrickleUp
+from .store import JobStore
+from .types import App, AppVersion, Batch, Host, Job, JobState, next_id
+
+AssimilatorFn = Callable[[Job, Any], None]
+
+
+@dataclass
+class DaemonControl:
+    """Pause switch per daemon — used to exercise §5.1 fault tolerance."""
+
+    transitioner: bool = True
+    assimilator: bool = True
+    file_deleter: bool = True
+    purger: bool = True
+    feeder: bool = True
+
+
+@dataclass
+class ProjectServer:
+    name: str = "project"
+    store: JobStore = field(default_factory=JobStore)
+    estimator: RuntimeEstimator = field(default_factory=RuntimeEstimator)
+    credit: CreditSystem = field(default_factory=CreditSystem)
+    allocator: LinearBoundedAllocator = field(default_factory=LinearBoundedAllocator)
+    adaptive: AdaptiveReplication = field(default_factory=AdaptiveReplication)
+    cache_size: int = 1024
+    n_scheduler_instances: int = 1
+    n_daemon_instances: int = 1
+    purge_delay: float = 0.0  # keep completed rows briefly (§4)
+    enabled: DaemonControl = field(default_factory=DaemonControl)
+    assimilators: Dict[str, AssimilatorFn] = field(default_factory=dict)
+    # trickle-up handlers (§3.5): app_name -> fn(instance, trickle, now)
+    trickle_handlers: Dict[str, Any] = field(default_factory=dict)
+    feeder: Feeder = None  # type: ignore[assignment]
+    schedulers: List[Scheduler] = field(default_factory=list)
+    transitioners: List[Transitioner] = field(default_factory=list)
+    _rr: int = 0
+    assimilated_outputs: List[Any] = field(default_factory=list)
+
+    def __post_init__(self) -> None:
+        self.feeder = Feeder(store=self.store, cache_size=self.cache_size)
+        self.schedulers = [
+            Scheduler(
+                store=self.store,
+                feeder=self.feeder,
+                estimator=self.estimator,
+                allocator=self.allocator,
+                adaptive=self.adaptive,
+                seed=i,
+            )
+            for i in range(self.n_scheduler_instances)
+        ]
+        self.transitioners = [
+            Transitioner(
+                store=self.store,
+                credit=self.credit,
+                adaptive=self.adaptive,
+                instance=i,
+                n_instances=self.n_daemon_instances,
+            )
+            for i in range(self.n_daemon_instances)
+        ]
+
+    # ------------------------------------------------------------------
+    # registration & submission (§3.9)
+    # ------------------------------------------------------------------
+
+    def add_app(self, app: App) -> App:
+        return self.store.add_app(app)
+
+    def add_host(self, host: Host) -> Host:
+        return self.store.add_host(host)
+
+    def submit_job(self, job: Job, now: float = 0.0) -> Job:
+        job.created_time = now
+        app = self.store.apps[job.app_name]
+        # validation/deadline parameters are set "typically at the level of
+        # app rather than job" (§4): inherit app values for any field the
+        # submitter left at the dataclass default
+        from .types import Job as JobCls
+
+        for field_name in (
+            "min_quorum",
+            "init_ninstances",
+            "max_error_instances",
+            "max_success_instances",
+            "delay_bound",
+        ):
+            if getattr(job, field_name) == JobCls.__dataclass_fields__[field_name].default:
+                setattr(job, field_name, getattr(app, field_name))
+        if app.adaptive_replication:
+            # start unreplicated; the dispatch path may bump the quorum (§3.4)
+            job.min_quorum = 1
+            job.init_ninstances = 1
+        self.allocator.ensure(job.submitter, now)
+        return self.store.submit_job(job)
+
+    def submit_batch(self, jobs: List[Job], submitter: str, now: float = 0.0) -> Batch:
+        """Batch submission (§3.9) — designed so a thousand jobs submit fast;
+        see benchmarks/bench_dispatch.py."""
+        batch = Batch(id=next_id("batch"), submitter=submitter, created_time=now)
+        self.store.batches[batch.id] = batch
+        for j in jobs:
+            j.batch_id = batch.id
+            j.submitter = submitter
+            self.submit_job(j, now)
+        return batch
+
+    # ------------------------------------------------------------------
+    # RPC entry (scheduler CGI instances, §5.1)
+    # ------------------------------------------------------------------
+
+    def rpc(self, request: ScheduleRequest, now: float) -> ScheduleReply:
+        self._handle_trickles(request, now)
+        sched = self.schedulers[self._rr % len(self.schedulers)]
+        self._rr += 1
+        return sched.handle_request(request, now)
+
+    def _handle_trickles(self, request: ScheduleRequest, now: float) -> None:
+        """Trickle-up messages are 'conveyed immediately to the server and
+        handled by project-specific logic' (§3.5). The default handler
+        grants partial credit for partial completion — the paper's example."""
+        for t in request.trickles:
+            inst = self.store.instances.get(t.instance_id)
+            if inst is None:
+                continue
+            job = self.store.jobs.get(inst.job_id)
+            if job is None:
+                continue
+            handler = self.trickle_handlers.get(job.app_name)
+            if handler is not None:
+                handler(inst, t, now)
+            else:
+                # default: partial credit proportional to fraction done
+                host = self.store.hosts.get(request.host_id)
+                if host is not None and t.fraction_done > 0:
+                    partial = (
+                        job.est_flop_count * t.fraction_done / 86400.0 / 1e9
+                    )
+                    self.credit.grant(f"host:{host.id}:partial", partial, now)
+
+    # ------------------------------------------------------------------
+    # daemons (§5.1)
+    # ------------------------------------------------------------------
+
+    def tick(self, now: float) -> None:
+        """Run one pass of every enabled daemon."""
+        if self.enabled.feeder:
+            self.feeder.fill()
+        if self.enabled.transitioner:
+            for t in self.transitioners:
+                t.tick(now)
+            if self.enabled.feeder:
+                self.feeder.fill()  # newly created instances become dispatchable
+        if self.enabled.assimilator:
+            self.assimilate(now)
+        if self.enabled.file_deleter:
+            self.delete_files(now)
+        if self.enabled.purger:
+            self.purge(now)
+        self._update_batches(now)
+
+    def assimilate(self, now: float) -> int:
+        n = 0
+        for job in self.store.jobs_to_assimilate():
+            handler = self.assimilators.get(job.app_name)
+            output = None
+            if job.canonical_instance_id is not None:
+                canonical = self.store.instances.get(job.canonical_instance_id)
+                output = canonical.output if canonical else None
+            if handler is not None:
+                handler(job, output)
+            else:
+                self.assimilated_outputs.append((job.id, output))
+            job.assimilated = True
+            n += 1
+        return n
+
+    def delete_files(self, now: float) -> int:
+        n = 0
+        for job in self.store.jobs_to_delete_files():
+            # retain canonical output until all instances resolved (§4)
+            if any(i.is_outstanding() for i in self.store.job_instances(job.id)):
+                continue
+            job.files_deleted = True
+            n += 1
+        return n
+
+    def purge(self, now: float) -> int:
+        n = 0
+        for job in list(self.store.jobs_to_purge()):
+            if now - job.created_time < self.purge_delay:
+                continue
+            self.store.purge_job(job)
+            n += 1
+        return n
+
+    def _update_batches(self, now: float) -> None:
+        for b in self.store.batches.values():
+            if b.completed_time is None and b.job_ids and self.store.batch_done(b.id):
+                b.completed_time = now
+
+    # ------------------------------------------------------------------
+    # status
+    # ------------------------------------------------------------------
+
+    def counts(self) -> Dict[str, int]:
+        from .types import InstanceState
+
+        jobs = self.store.jobs.values()
+        return {
+            "jobs_active": sum(1 for j in jobs if j.state == JobState.ACTIVE),
+            "jobs_success": sum(1 for j in self.store.jobs.values() if j.state == JobState.SUCCESS),
+            "jobs_failure": sum(1 for j in self.store.jobs.values() if j.state == JobState.FAILURE),
+            "instances_unsent": sum(
+                1 for i in self.store.instances.values() if i.state == InstanceState.UNSENT
+            ),
+            "instances_in_progress": sum(
+                1 for i in self.store.instances.values() if i.state == InstanceState.IN_PROGRESS
+            ),
+        }

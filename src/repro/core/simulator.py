@@ -1,0 +1,532 @@
+"""EmBOINC-style virtual-time emulator (§9).
+
+"researchers began using emulation — simulators using the actual BOINC code
+to model client and server behavior ... EmBOINC combines a simulator of a
+large population of volunteer hosts (driven either by trace data or by a
+random model) with an emulator of a project server — that is, the actual
+server software ... using virtual time instead of real time."
+
+This module does exactly that: a deterministic event-driven simulator whose
+host population drives the *actual* ``ProjectServer`` / ``Client`` /
+``Scheduler`` / ``Transitioner`` code in virtual time. All paper-claim
+benchmarks and the integration tests run on it.
+"""
+from __future__ import annotations
+
+import heapq
+import math
+import random
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from .client import (
+    Client,
+    ClientJob,
+    ClientPrefs,
+    ClientResource,
+    ProjectAttachment,
+    RunState,
+)
+from .credit import peak_flop_count
+from .scheduler import CompletedResult, ResourceRequest, ScheduleRequest
+from .server import ProjectServer
+from .types import (
+    Host,
+    InstanceOutcome,
+    Platform,
+    ProcessingResource,
+    ResourceType,
+)
+
+# ---------------------------------------------------------------------------
+# Host population model (EmBOINC's "random model")
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class HostSpec:
+    """Behavioural model of one volunteer host."""
+
+    host: Host
+    efficiency: float = 0.5  # actual/peak FLOPS (§7: varies ~2x between hosts)
+    runtime_noise: float = 0.1  # lognormal sigma on job runtimes
+    error_prob: float = 0.0  # hardware flakiness: wrong output
+    crash_prob: float = 0.0  # app crash: CLIENT_ERROR
+    malicious: bool = False  # intentionally wrong results (§3.4)
+    cheat_prob: float = 1.0  # if malicious, P(fake result)
+    avail_on_mean: float = 8 * 3600.0  # §1.1: availability ~60%/40%
+    avail_off_mean: float = 4 * 3600.0
+    churn_time: Optional[float] = None  # permanent departure (device churn)
+    rpc_poll: float = 600.0
+
+
+def make_population(
+    n_hosts: int,
+    seed: int = 0,
+    cpu_flops: float = 16.5e9,  # paper §1.1: average 16.5 CPU GigaFLOPS
+    gpu_fraction: float = 0.0,
+    gpu_flops: float = 1e12,
+    ncpus: int = 4,
+    error_prob: float = 0.0,
+    malicious_fraction: float = 0.0,
+    availability: float = 1.0,
+    churn_rate: float = 0.0,  # departures per host per simulated second
+    horizon: float = 0.0,
+    speed_spread: float = 0.5,
+) -> List[HostSpec]:
+    """Random host population: heterogeneous speeds (lognormal), OSes per the
+    paper's 85/7/7 Windows/Mac/Linux split, optional GPUs, availability and
+    churn processes, and a malicious subset."""
+    rng = random.Random(seed)
+    out: List[HostSpec] = []
+    for i in range(n_hosts):
+        r = rng.random()
+        os_name = "windows" if r < 0.85 else ("mac" if r < 0.92 else "linux")
+        speed = cpu_flops * math.exp(rng.gauss(0.0, speed_spread))
+        resources = {
+            ResourceType.CPU: ProcessingResource(
+                rtype=ResourceType.CPU,
+                ninstances=ncpus,
+                peak_flops=speed,
+                availability=availability,
+            )
+        }
+        platforms = [Platform(os_name, "x86_64")]
+        if rng.random() < gpu_fraction:
+            resources[ResourceType.GPU] = ProcessingResource(
+                rtype=ResourceType.GPU,
+                ninstances=1,
+                peak_flops=gpu_flops * math.exp(rng.gauss(0.0, speed_spread)),
+                availability=availability,
+            )
+        host = Host(
+            id=i + 1,
+            platforms=tuple(platforms),
+            resources=resources,
+            cpu_vendor=rng.choice(["genuineintel", "authenticamd"]),
+            cpu_model=f"model{rng.randrange(4)}",
+            os_version=f"{os_name}-10.{rng.randrange(3)}",
+            on_fraction=availability,
+            volunteer_id=i + 1,
+        )
+        churn_time = None
+        if churn_rate > 0.0 and horizon > 0.0:
+            t = rng.expovariate(churn_rate)
+            if t < horizon:
+                churn_time = t
+        if availability >= 1.0:
+            on_mean, off_mean = 1e18, 1.0
+        else:
+            on_mean = 8 * 3600.0
+            off_mean = on_mean * (1.0 - availability) / max(availability, 1e-6)
+        out.append(
+            HostSpec(
+                host=host,
+                efficiency=rng.uniform(0.35, 0.7),
+                runtime_noise=0.08,
+                error_prob=error_prob,
+                crash_prob=0.0,
+                malicious=(rng.random() < malicious_fraction),
+                avail_on_mean=on_mean,
+                avail_off_mean=off_mean,
+                churn_time=churn_time,
+                rpc_poll=600.0,
+            )
+        )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# The simulation
+# ---------------------------------------------------------------------------
+
+_RPC = "rpc"
+_COMPLETE = "complete"
+_AVAIL = "avail"
+_CHURN = "churn"
+_SERVER = "server"
+_CALLBACK = "callback"
+
+
+@dataclass
+class _RunningJob:
+    client_job: ClientJob
+    actual_total: float  # true runtime (scaled), drawn at dispatch
+    accrued: float = 0.0
+    started_at: float = 0.0
+
+
+@dataclass
+class SimMetrics:
+    completed_instances: int = 0
+    correct_accepted: int = 0
+    wrong_accepted: int = 0  # accepted-as-canonical but wrong (error rate)
+    instances_executed: int = 0
+    rpcs: int = 0
+    rpcs_with_work: int = 0
+    rpcs_requesting_work: int = 0
+    busy_cpu_seconds: float = 0.0
+    capacity_cpu_seconds: float = 0.0
+    flops_done: float = 0.0
+
+    @property
+    def replication_overhead(self) -> float:
+        if self.completed_instances == 0:
+            return 0.0
+        jobs = max(1, self.correct_accepted + self.wrong_accepted)
+        return self.instances_executed / jobs
+
+    @property
+    def error_rate(self) -> float:
+        tot = self.correct_accepted + self.wrong_accepted
+        return self.wrong_accepted / tot if tot else 0.0
+
+    @property
+    def idle_fraction(self) -> float:
+        if self.capacity_cpu_seconds <= 0:
+            return 0.0
+        return 1.0 - self.busy_cpu_seconds / self.capacity_cpu_seconds
+
+
+class GridSimulation:
+    """Drives real server+client code with a synthetic population (§9)."""
+
+    def __init__(
+        self,
+        server: ProjectServer,
+        population: List[HostSpec],
+        seed: int = 0,
+        server_tick_period: float = 60.0,
+        ground_truth: Optional[Callable[[int], Any]] = None,
+        executor: Optional[Callable[[Any, Host], Any]] = None,
+        corruptor: Optional[Callable[[Any, random.Random], Any]] = None,
+    ) -> None:
+        self.server = server
+        self.specs: Dict[int, HostSpec] = {s.host.id: s for s in population}
+        self.rng = random.Random(seed)
+        self.server_tick_period = server_tick_period
+        self.ground_truth = ground_truth or (lambda job_id: float(job_id) * 1.5)
+        # real-compute hook (grid runtime): executor(job, host) -> output
+        self.executor = executor
+        self.corruptor = corruptor
+        self.now = 0.0
+        self.metrics = SimMetrics()
+        self._heap: List[Tuple[float, int, str, int]] = []
+        self._seq = 0
+        self._gen: Dict[int, int] = {}
+        self._event_gen: Dict[int, int] = {}
+        self.clients: Dict[int, Client] = {}
+        self.available: Dict[int, bool] = {}
+        self.running: Dict[int, Dict[int, _RunningJob]] = {}
+        self._last_update: Dict[int, float] = {}
+        self._instance_meta: Dict[int, Tuple[int, float]] = {}  # iid -> (version_id, actual_total)
+        self._wrong_outputs: Dict[int, bool] = {}  # iid -> output was wrong
+        self._callbacks: Dict[int, Callable[[float], None]] = {}
+        self._capacity_accounted = 0.0
+
+        for spec in population:
+            host = spec.host
+            server.add_host(host)
+            resources = {
+                rt: ClientResource(rt, r.ninstances, r.peak_flops, r.availability)
+                for rt, r in host.resources.items()
+            }
+            client = Client(
+                host_id=host.id,
+                resources=resources,
+                prefs=ClientPrefs(buffer_lo_days=0.05, buffer_hi_days=0.2),
+                ram_bytes=host.ram_bytes,
+            )
+            rtypes = tuple(host.resources.keys())
+            client.attach(ProjectAttachment(name=server.name, resource_types=rtypes))
+            self.clients[host.id] = client
+            self.available[host.id] = True
+            self.running[host.id] = {}
+            self._gen[host.id] = 0
+            self._last_update[host.id] = 0.0
+            self._push(self.rng.uniform(0.0, spec.rpc_poll), _RPC, host.id)
+            if spec.avail_off_mean > 0 and spec.avail_on_mean < 1e17:
+                self._push(self.rng.expovariate(1.0 / spec.avail_on_mean), _AVAIL, host.id)
+            if spec.churn_time is not None:
+                self._push(spec.churn_time, _CHURN, host.id)
+        self._push(0.0, _SERVER, 0)
+
+    # -- event plumbing --
+
+    def _push(self, t: float, kind: str, host_id: int, gen: int = -1) -> None:
+        self._seq += 1
+        heapq.heappush(self._heap, (t, self._seq, kind, host_id))
+        if kind == _COMPLETE:
+            self._event_gen[self._seq] = gen
+
+    def schedule_callback(self, t: float, fn: Callable[[float], None]) -> None:
+        """Run ``fn(now)`` at virtual time ``t`` (streamed job submission,
+        daemon outages, elasticity experiments...)."""
+        self._seq += 1
+        heapq.heappush(self._heap, (t, self._seq, _CALLBACK, 0))
+        self._callbacks[self._seq] = fn
+
+    # -- main loop --
+
+    def run(self, horizon: float) -> SimMetrics:
+        while self._heap and self._heap[0][0] <= horizon:
+            t, seq, kind, host_id = heapq.heappop(self._heap)
+            if host_id:
+                self._advance_running(host_id, t)
+            self.now = t
+            if kind == _SERVER:
+                self.server.tick(t)
+                self._push(t + self.server_tick_period, _SERVER, 0)
+            elif kind == _RPC:
+                self._handle_rpc(host_id, t)
+            elif kind == _COMPLETE:
+                if self._event_gen.pop(seq, -1) == self._gen.get(host_id, 0):
+                    self._handle_completions(host_id, t)
+            elif kind == _AVAIL:
+                self._toggle_availability(host_id, t)
+            elif kind == _CHURN:
+                self._churn(host_id, t)
+            elif kind == _CALLBACK:
+                fn = self._callbacks.pop(seq, None)
+                if fn is not None:
+                    fn(t)
+        self.now = horizon
+        # capacity accounting (incremental: run() may be called in windows)
+        dt_cap = horizon - self._capacity_accounted
+        if dt_cap > 0:
+            for spec in self.specs.values():
+                cpu = spec.host.resources.get(ResourceType.CPU)
+                if cpu:
+                    self.metrics.capacity_cpu_seconds += cpu.ninstances * dt_cap
+            self._capacity_accounted = horizon
+        self.server.tick(horizon)
+        return self.metrics
+
+    # -- host availability & churn --
+
+    def _toggle_availability(self, host_id: int, t: float) -> None:
+        spec = self.specs.get(host_id)
+        if spec is None:
+            return
+        on = self.available[host_id]
+        self.available[host_id] = not on
+        self._gen[host_id] += 1  # invalidate completion events
+        if on:
+            nxt = self.rng.expovariate(1.0 / spec.avail_off_mean)
+        else:
+            nxt = self.rng.expovariate(1.0 / spec.avail_on_mean)
+            self._reschedule_completions(host_id, t)
+        self._push(t + nxt, _AVAIL, host_id)
+
+    def _churn(self, host_id: int, t: float) -> None:
+        """Permanent departure: in-progress instances will hit their
+        deadlines and be retried on other hosts (§4)."""
+        self.specs.pop(host_id, None)
+        self.clients.pop(host_id, None)
+        self.running.pop(host_id, None)
+        self.available[host_id] = False
+        self.server.store.remove_host(host_id)
+
+    # -- execution model --
+
+    def _advance_running(self, host_id: int, t: float) -> None:
+        last = self._last_update.get(host_id, t)
+        self._last_update[host_id] = t
+        if host_id == 0 or not self.available.get(host_id, False):
+            return
+        running = self.running.get(host_id)
+        if not running:
+            return
+        dt = t - last
+        if dt <= 0:
+            return
+        for rj in running.values():
+            if rj.client_job.state == RunState.RUNNING:
+                rj.accrued += dt
+                rj.client_job.runtime += dt
+                total = max(rj.actual_total, 1e-9)
+                rj.client_job.fraction_done = min(1.0, rj.accrued / total)
+                self.metrics.busy_cpu_seconds += dt * rj.client_job.cpu_usage()
+
+    def _reschedule_completions(self, host_id: int, t: float) -> None:
+        """(Re)issue completion events for the host's running set."""
+        self._gen[host_id] += 1
+        gen = self._gen[host_id]
+        for rj in self.running.get(host_id, {}).values():
+            if rj.client_job.state == RunState.RUNNING:
+                remaining = max(0.0, rj.actual_total - rj.accrued)
+                self._push(t + remaining, _COMPLETE, host_id, gen)
+
+    def _handle_completions(self, host_id: int, t: float) -> None:
+        spec = self.specs.get(host_id)
+        client = self.clients.get(host_id)
+        if spec is None or client is None or not self.available.get(host_id, False):
+            return
+        running = self.running[host_id]
+        done_ids = [
+            iid
+            for iid, rj in running.items()
+            if rj.accrued >= rj.actual_total - 1e-6 and rj.client_job.state == RunState.RUNNING
+        ]
+        for iid in done_ids:
+            rj = running.pop(iid)
+            cj = rj.client_job
+            cj.state = RunState.DONE
+            cj.fraction_done = 1.0
+            client.jobs = [j for j in client.jobs if j.instance_id != iid]
+            client.running = [j for j in client.running if j.instance_id != iid]
+            client.completed.append(cj)
+            self.metrics.instances_executed += 1
+            self.metrics.flops_done += cj.est_flop_count
+        if done_ids:
+            self._start_jobs(host_id, t)
+        # report opportunistically (deferred batching handled in _handle_rpc)
+        if client.completed and client.should_report(self.server.name, t):
+            self._do_rpc(host_id, t, force_report=True)
+
+    def _start_jobs(self, host_id: int, t: float) -> None:
+        client = self.clients[host_id]
+        chosen = client.schedule(t)
+        running = self.running[host_id]
+        for cj in chosen:
+            if cj.instance_id not in running:
+                running[cj.instance_id] = _RunningJob(
+                    client_job=cj,
+                    actual_total=self._instance_meta[cj.instance_id][1],
+                    started_at=t,
+                )
+        self._reschedule_completions(host_id, t)
+
+    # -- RPC path --
+
+    def _handle_rpc(self, host_id: int, t: float) -> None:
+        spec = self.specs.get(host_id)
+        if spec is None:
+            return
+        if self.available.get(host_id, False):
+            self._do_rpc(host_id, t)
+        self._push(t + spec.rpc_poll, _RPC, host_id)
+
+    def _do_rpc(self, host_id: int, t: float, force_report: bool = False) -> None:
+        spec = self.specs[host_id]
+        client = self.clients[host_id]
+        host = spec.host
+
+        fetch = client.choose_fetch_project(t)
+        reqs: Dict[ResourceType, ResourceRequest] = {}
+        if fetch is not None and fetch.project == self.server.name:
+            reqs = fetch.requests
+        want_report = force_report or client.should_report(self.server.name, t)
+        if not reqs and not want_report:
+            return
+
+        completed: List[CompletedResult] = []
+        if want_report:
+            for cj in client.take_completed(self.server.name):
+                completed.append(self._make_result(spec, cj, t))
+
+        request = ScheduleRequest(
+            host_id=host_id,
+            requests=reqs,
+            completed=completed,
+            usable_disk=host.disk_free_bytes,
+        )
+        self.metrics.rpcs += 1
+        if reqs:
+            self.metrics.rpcs_requesting_work += 1
+        reply = self.server.rpc(request, t)
+        proj = client.projects.get(self.server.name)
+        if reply.jobs:
+            self.metrics.rpcs_with_work += 1
+            if proj:
+                for rt in host.resources:
+                    proj.backoff_for(rt).register_success()
+        elif reqs and proj:
+            for rt in reqs:
+                proj.backoff_for(rt).register_failure(t)
+
+        for dj in reply.jobs:
+            ev = dj.version.plan_class.evaluate(host)
+            usage = ev[0] if ev else {ResourceType.CPU: 1.0}
+            actual = self._draw_runtime(spec, dj.job.est_flop_count, usage)
+            cj = ClientJob(
+                instance_id=dj.instance.id,
+                job_id=dj.job.id,
+                project=self.server.name,
+                app_name=dj.job.app_name,
+                usage=usage,
+                est_flops=dj.est_flops,
+                est_flop_count=dj.job.est_flop_count,
+                deadline=dj.instance.deadline,
+                est_wss=dj.job.ram_bytes,
+            )
+            client.jobs.append(cj)
+            self._instance_meta[cj.instance_id] = (dj.version.id, actual)
+        if reply.jobs:
+            self._start_jobs(host_id, t)
+
+    def _draw_runtime(self, spec: HostSpec, est_flop_count: float, usage: Dict[ResourceType, float]) -> float:
+        pf = spec.host.peak_flops(usage)
+        if pf <= 0:
+            return float("inf")
+        base = est_flop_count / (pf * spec.efficiency)
+        noise = math.exp(self.rng.gauss(0.0, spec.runtime_noise))
+        return base * noise
+
+    def _make_result(self, spec: HostSpec, cj: ClientJob, t: float) -> CompletedResult:
+        job = self.server.store.jobs.get(cj.job_id)
+        crashed = self.rng.random() < spec.crash_prob
+        if crashed:
+            self._wrong_outputs[cj.instance_id] = False
+            return CompletedResult(
+                instance_id=cj.instance_id,
+                outcome=InstanceOutcome.CLIENT_ERROR,
+                runtime=cj.runtime,
+                exit_code=1,
+            )
+        if self.executor is not None:
+            truth = self.executor(job, spec.host)
+        else:
+            truth = self.ground_truth(cj.job_id)
+        wrong = False
+        if spec.malicious and self.rng.random() < spec.cheat_prob:
+            output, wrong = self._corrupt(truth), True
+        elif self.rng.random() < spec.error_prob:
+            output, wrong = self._corrupt(truth), True
+        else:
+            output = truth
+        self._wrong_outputs[cj.instance_id] = wrong
+        pfc = peak_flop_count(cj.runtime, cj.usage, spec.host)
+        return CompletedResult(
+            instance_id=cj.instance_id,
+            outcome=InstanceOutcome.SUCCESS,
+            runtime=cj.runtime,
+            peak_flop_count=pfc,
+            output=output,
+        )
+
+    def _corrupt(self, truth: Any) -> Any:
+        if self.corruptor is not None:
+            return self.corruptor(truth, self.rng)
+        if isinstance(truth, float):
+            return truth + self.rng.uniform(1.0, 2.0)
+        return ("corrupt", self.rng.random())
+
+    # -- end-of-run audit --
+
+    def audit_validation(self) -> None:
+        """Count canonical results that were wrong (accepted-error rate)."""
+        store = self.server.store
+        counted = set()
+        for job in list(store.jobs.values()):
+            if job.canonical_instance_id is None or job.id in counted:
+                continue
+            counted.add(job.id)
+            wrong = self._wrong_outputs.get(job.canonical_instance_id, False)
+            if wrong:
+                self.metrics.wrong_accepted += 1
+            else:
+                self.metrics.correct_accepted += 1
+        self.metrics.completed_instances = len(
+            [v for v in self._wrong_outputs]
+        )

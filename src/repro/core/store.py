@@ -1,0 +1,178 @@
+"""In-memory job database (the relational DB of §5.1).
+
+The real BOINC server centers on MySQL; here the store is an indexed
+in-memory structure with the same role: the single point of coordination
+between scheduler instances and daemons. Daemons communicate *only* through
+this store (flags on rows), which is what makes the multi-daemon
+architecture fault-tolerant: a stopped daemon's work accumulates here.
+
+ID-space sharding (§5.1): every daemon iterates ``shard(items, i, n)`` —
+instance ``i`` of ``n`` handles rows with ``id % n == i``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, Iterator, List, Optional, Tuple
+
+from .types import (
+    App,
+    AppVersion,
+    Batch,
+    Host,
+    InstanceOutcome,
+    InstanceState,
+    Job,
+    JobInstance,
+    JobState,
+    next_id,
+)
+
+
+def shard(ids: Iterable[int], instance: int, n_instances: int) -> Iterator[int]:
+    """ID-space daemon sharding: (ID mod N) == i (§5.1)."""
+    for i in ids:
+        if i % n_instances == instance:
+            yield i
+
+
+@dataclass
+class JobStore:
+    apps: Dict[str, App] = field(default_factory=dict)
+    app_versions: Dict[int, AppVersion] = field(default_factory=dict)
+    hosts: Dict[int, Host] = field(default_factory=dict)
+    jobs: Dict[int, Job] = field(default_factory=dict)
+    instances: Dict[int, JobInstance] = field(default_factory=dict)
+    batches: Dict[int, Batch] = field(default_factory=dict)
+    _by_job: Dict[int, List[int]] = field(default_factory=dict)
+    # instances awaiting dispatch, FIFO per app
+    _unsent: Dict[str, List[int]] = field(default_factory=dict)
+    # monotonically increasing DB "row version" for cheap change detection
+    mutations: int = 0
+
+    # ---- registration ----
+
+    def add_app(self, app: App) -> App:
+        self.apps[app.name] = app
+        for v in app.versions:
+            self.app_versions[v.id] = v
+        self.mutations += 1
+        return app
+
+    def add_app_version(self, version: AppVersion) -> AppVersion:
+        self.apps[version.app_name].add_version(version)
+        self.app_versions[version.id] = version
+        self.mutations += 1
+        return version
+
+    def add_host(self, host: Host) -> Host:
+        self.hosts[host.id] = host
+        self.mutations += 1
+        return host
+
+    def remove_host(self, host_id: int) -> None:
+        self.hosts.pop(host_id, None)
+        self.mutations += 1
+
+    # ---- jobs & instances ----
+
+    def submit_job(self, job: Job) -> Job:
+        assert job.app_name in self.apps, f"unknown app {job.app_name}"
+        self.jobs[job.id] = job
+        self._by_job.setdefault(job.id, [])
+        job.transition_flag = True
+        if job.batch_id:
+            self.batches.setdefault(
+                job.batch_id, Batch(id=job.batch_id, submitter=job.submitter)
+            ).job_ids.append(job.id)
+        self.mutations += 1
+        return job
+
+    def create_instance(self, job: Job) -> JobInstance:
+        inst = JobInstance(id=next_id("instance"), job_id=job.id)
+        self.instances[inst.id] = inst
+        self._by_job[job.id].append(inst.id)
+        self._unsent.setdefault(job.app_name, []).append(inst.id)
+        self.mutations += 1
+        return inst
+
+    def job_instances(self, job_id: int) -> List[JobInstance]:
+        return [self.instances[i] for i in self._by_job.get(job_id, [])]
+
+    def unsent_instances(self, app_name: str, limit: int = 0) -> List[JobInstance]:
+        ids = self._unsent.get(app_name, [])
+        out: List[JobInstance] = []
+        kept: List[int] = []
+        for iid in ids:
+            inst = self.instances.get(iid)
+            if inst is None or inst.state != InstanceState.UNSENT:
+                continue  # lazily drop stale queue entries
+            kept.append(iid)
+            if not limit or len(out) < limit:
+                out.append(inst)
+        self._unsent[app_name] = kept
+        return out
+
+    def requeue_unsent(self, inst: JobInstance) -> None:
+        """Return an instance to the dispatch queue (feeder refill path)."""
+        job = self.jobs[inst.job_id]
+        self._unsent.setdefault(job.app_name, []).append(inst.id)
+
+    def host_has_instance_of_job(self, host_id: int, job_id: int) -> bool:
+        """One-instance-per-host rule ('slow check', §6.4) — BOINC actually
+        enforces one per *volunteer*; we key on host's volunteer."""
+        host = self.hosts.get(host_id)
+        vol = host.volunteer_id if host else None
+        for inst in self.job_instances(job_id):
+            if inst.host_id is None:
+                continue
+            h = self.hosts.get(inst.host_id)
+            if inst.host_id == host_id or (vol is not None and h and h.volunteer_id == vol):
+                return True
+        return False
+
+    # ---- batch bookkeeping (§3.9) ----
+
+    def batch_done(self, batch_id: int) -> bool:
+        b = self.batches.get(batch_id)
+        if b is None:
+            return False
+        return all(
+            self.jobs[j].state in (JobState.SUCCESS, JobState.FAILURE)
+            for j in b.job_ids
+        )
+
+    # ---- queries for daemons ----
+
+    def jobs_with_flag(self) -> List[Job]:
+        return [j for j in self.jobs.values() if j.transition_flag and j.state == JobState.ACTIVE]
+
+    def jobs_to_assimilate(self) -> List[Job]:
+        return [
+            j
+            for j in self.jobs.values()
+            if j.state in (JobState.SUCCESS, JobState.FAILURE) and not j.assimilated
+        ]
+
+    def jobs_to_delete_files(self) -> List[Job]:
+        return [
+            j
+            for j in self.jobs.values()
+            if j.assimilated and not j.files_deleted
+        ]
+
+    def jobs_to_purge(self) -> List[Job]:
+        return [
+            j
+            for j in self.jobs.values()
+            if j.assimilated and j.files_deleted and j.state != JobState.PURGED
+        ]
+
+    def purge_job(self, job: Job) -> None:
+        """Remove completed rows; the DB is a cache of jobs in progress, not
+        an archive (§4)."""
+        for iid in self._by_job.get(job.id, []):
+            self.instances.pop(iid, None)
+        self._by_job.pop(job.id, None)
+        job.state = JobState.PURGED
+        self.jobs.pop(job.id, None)
+        self.mutations += 1

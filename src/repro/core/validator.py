@@ -1,0 +1,172 @@
+"""Replication-based result validation (§3.4).
+
+A job's successful instances are compared pairwise with an app-supplied
+comparator (bitwise by default, fuzzy-numeric for stable numeric apps). If a
+strict majority of a quorum agree, one member is designated the canonical
+instance. Homogeneous redundancy restricts instances of one job to a single
+host equivalence class so that bitwise comparison is meaningful; homogeneous
+app version does the same at app-version granularity.
+
+For tensor payloads, the hot comparison loop is the ``quorum_compare`` Pallas
+kernel (`repro.kernels.quorum_compare`); this module falls back to numpy when
+payloads are plain Python.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .types import (
+    App,
+    InstanceOutcome,
+    InstanceState,
+    JobInstance,
+    ValidateState,
+)
+
+Comparator = Callable[[Any, Any], bool]
+
+
+# ---------------------------------------------------------------------------
+# Comparators
+# ---------------------------------------------------------------------------
+
+
+def bitwise_equal(a: Any, b: Any) -> bool:
+    """Byte-for-byte comparison (the validator BOINC supplies for apps using
+    homogeneous redundancy)."""
+    la, lb = _leaves(a), _leaves(b)
+    if len(la) != len(lb):
+        return False
+    for xa, xb in zip(la, lb):
+        if isinstance(xa, np.ndarray) or isinstance(xb, np.ndarray):
+            xa, xb = np.asarray(xa), np.asarray(xb)
+            if xa.shape != xb.shape or xa.dtype != xb.dtype:
+                return False
+            if not np.array_equal(xa.view(np.uint8) if xa.dtype.kind == "f" else xa,
+                                  xb.view(np.uint8) if xb.dtype.kind == "f" else xb):
+                return False
+        elif xa != xb:
+            return False
+    return True
+
+
+def fuzzy_comparator(rtol: float = 1e-5, atol: float = 1e-8,
+                     max_bad_fraction: float = 0.0) -> Comparator:
+    """Application-specific fuzzy validator (§3.4): values agree within
+    tolerances; optionally allow a small fraction of out-of-band elements
+    (useful for bf16 gradient payloads where a handful of large-magnitude
+    accumulations legitimately differ)."""
+
+    def cmp(a: Any, b: Any) -> bool:
+        la, lb = _leaves(a), _leaves(b)
+        if len(la) != len(lb):
+            return False
+        total = 0
+        bad = 0
+        for xa, xb in zip(la, lb):
+            xa = np.asarray(xa, dtype=np.float64)
+            xb = np.asarray(xb, dtype=np.float64)
+            if xa.shape != xb.shape:
+                return False
+            ok = np.isclose(xa, xb, rtol=rtol, atol=atol)
+            total += ok.size
+            bad += int(ok.size - np.count_nonzero(ok))
+        if total == 0:
+            return True
+        return (bad / total) <= max_bad_fraction
+
+    return cmp
+
+
+def _leaves(x: Any) -> List[Any]:
+    """Flatten nested dict/list/tuple payloads to a leaf list (stable order)."""
+    if isinstance(x, dict):
+        out: List[Any] = []
+        for k in sorted(x):
+            out.extend(_leaves(x[k]))
+        return out
+    if isinstance(x, (list, tuple)):
+        out = []
+        for v in x:
+            out.extend(_leaves(v))
+        return out
+    return [x]
+
+
+# ---------------------------------------------------------------------------
+# Quorum check (§3.4, §4)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ValidationResult:
+    canonical: Optional[JobInstance]
+    valid: List[JobInstance]
+    invalid: List[JobInstance]
+    inconclusive: List[JobInstance]
+
+
+def check_set(
+    instances: Sequence[JobInstance],
+    comparator: Optional[Comparator],
+    min_quorum: int,
+) -> ValidationResult:
+    """Find a canonical instance among successful instances (§4).
+
+    Groups instances into equivalence classes under ``comparator``; if a
+    class forms a strict majority of the quorum set, its first member is
+    canonical; members of that class are VALID, others INVALID. With fewer
+    than ``min_quorum`` successes, everything is INCONCLUSIVE.
+    """
+    cmp = comparator or bitwise_equal
+    succ = [i for i in instances if i.outcome == InstanceOutcome.SUCCESS]
+    if len(succ) < min_quorum:
+        return ValidationResult(None, [], [], list(succ))
+
+    # Greedy equivalence grouping (comparator assumed transitive in-tolerance).
+    groups: List[List[JobInstance]] = []
+    for inst in succ:
+        placed = False
+        for g in groups:
+            if cmp(g[0].output, inst.output):
+                g.append(inst)
+                placed = True
+                break
+        if not placed:
+            groups.append([inst])
+
+    groups.sort(key=len, reverse=True)
+    best = groups[0]
+    # "a quorum of consistent instances" (§3.4/§4): the largest equivalent
+    # group must reach min_quorum (for the min_quorum-sized initial set this
+    # is exactly the paper's strict-majority-of-these condition; for larger
+    # sets it is what terminates the repeat-until-quorum loop).
+    if len(best) >= min_quorum:
+        canonical = best[0]
+        valid = list(best)
+        invalid = [i for g in groups[1:] for i in g]
+        for i in valid:
+            i.validate_state = ValidateState.VALID
+        for i in invalid:
+            i.validate_state = ValidateState.INVALID
+        return ValidationResult(canonical, valid, invalid, [])
+
+    for i in succ:
+        i.validate_state = ValidateState.INCONCLUSIVE
+    return ValidationResult(None, [], [], list(succ))
+
+
+def validate_against_canonical(
+    instance: JobInstance,
+    canonical: JobInstance,
+    comparator: Optional[Comparator],
+) -> bool:
+    """A straggler success reported after the canonical instance exists is
+    validated against it (to grant credit) (§4)."""
+    cmp = comparator or bitwise_equal
+    ok = bool(cmp(canonical.output, instance.output))
+    instance.validate_state = ValidateState.VALID if ok else ValidateState.INVALID
+    return ok

@@ -1,0 +1,3 @@
+from .pipeline import DataConfig, DataShard, global_batch, make_batch
+
+__all__ = ["DataConfig", "DataShard", "global_batch", "make_batch"]

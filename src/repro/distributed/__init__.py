@@ -1,0 +1,53 @@
+from .fault_tolerance import (
+    ElasticPlan,
+    HeartbeatMonitor,
+    StragglerPolicy,
+    candidate_meshes,
+    plan_elastic_config,
+)
+from .hlo_analysis import (
+    CollectiveStats,
+    collective_stats,
+    cost_analysis_bytes,
+    cost_analysis_flops,
+    memory_analysis_dict,
+    op_census,
+)
+from .roofline import DCN_BW, HBM_BW, ICI_BW, PEAK_FLOPS_BF16, RooflineTerms
+from .sharding import (
+    DEFAULT_RULES,
+    ShardingRules,
+    batch_specs,
+    make_rules,
+    opt_state_specs,
+    param_specs,
+    shardings_from_specs,
+    tree_specs_from_axes,
+)
+
+__all__ = [
+    "CollectiveStats",
+    "DCN_BW",
+    "DEFAULT_RULES",
+    "ElasticPlan",
+    "HBM_BW",
+    "HeartbeatMonitor",
+    "ICI_BW",
+    "PEAK_FLOPS_BF16",
+    "RooflineTerms",
+    "ShardingRules",
+    "StragglerPolicy",
+    "batch_specs",
+    "candidate_meshes",
+    "collective_stats",
+    "cost_analysis_bytes",
+    "cost_analysis_flops",
+    "make_rules",
+    "memory_analysis_dict",
+    "op_census",
+    "opt_state_specs",
+    "param_specs",
+    "plan_elastic_config",
+    "shardings_from_specs",
+    "tree_specs_from_axes",
+]

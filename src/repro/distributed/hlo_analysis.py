@@ -1,0 +1,164 @@
+"""HLO-text analysis: collective bytes + op census for the roofline.
+
+``compiled.cost_analysis()`` gives FLOPs and HBM bytes but NOT collective
+traffic, so we parse the optimized HLO module text and sum operand sizes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute. Shapes are parsed from the HLO type annotations, e.g.
+
+  %all-reduce.1 = f32[1024,512]{1,0} all-reduce(f32[1024,512]{1,0} %x), ...
+
+Also counts remat recompute (duplicate fusion roots) and reports an op
+census used by the perf loop ("which collective grew?").
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s4": 1,
+    "u4": 1,
+    "s8": 1,
+    "u8": 1,
+    "s16": 2,
+    "u16": 2,
+    "f16": 2,
+    "bf16": 2,
+    "s32": 4,
+    "u32": 4,
+    "f32": 4,
+    "s64": 8,
+    "u64": 8,
+    "f64": 8,
+    "c64": 8,
+    "c128": 16,
+    "f8e4m3fn": 1,
+    "f8e5m2": 1,
+}
+
+# matches e.g. f32[128,1024] or bf16[8,16,2048]{2,1,0} or f32[] (scalar)
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+_COLLECTIVE_OPS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+    "collective-broadcast",
+)
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _line_output_bytes(line: str) -> int:
+    """Bytes of the op's OUTPUT (first type annotation, incl. tuples)."""
+    lhs = line.split(" = ", 1)
+    if len(lhs) != 2:
+        return 0
+    rhs = lhs[1]
+    # output type(s) appear before the op name; take annotations up to '('
+    head = rhs.split("(", 1)[0]
+    total = 0
+    for m in _SHAPE_RE.finditer(head):
+        total += _shape_bytes(m.group(1), m.group(2))
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_op: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
+    count_by_op: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
+    largest: List[Tuple[int, str]] = field(default_factory=list)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_op.values())
+
+    def summary(self) -> str:
+        parts = [
+            f"{op}: n={self.count_by_op[op]} bytes={self.bytes_by_op[op]:,}"
+            for op in sorted(self.bytes_by_op)
+        ]
+        return "; ".join(parts) if parts else "none"
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    """Sum collective traffic over the (optimized) HLO module text."""
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if " = " not in ls:
+            continue
+        for op in _COLLECTIVE_OPS:
+            # op name appears as `op(`, `op-start(`, or `op-done(`
+            if re.search(rf"\b{op}(-start)?\(", ls):
+                if f"{op}-done" in ls:
+                    continue  # avoid double counting start/done pairs
+                nbytes = _line_output_bytes(ls)
+                stats.bytes_by_op[op] += nbytes
+                stats.count_by_op[op] += 1
+                stats.largest.append((nbytes, ls[:160]))
+                break
+    stats.largest.sort(key=lambda t: -t[0])
+    stats.largest = stats.largest[:12]
+    return stats
+
+
+def op_census(hlo_text: str) -> Dict[str, int]:
+    """Count ops by name — spotting remat duplicates and reshape storms."""
+    census: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if " = " not in ls:
+            continue
+        m = re.search(r"= (?:\([^)]*\) )?(?:[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})? )?([a-z][a-z0-9-]*)\(", ls)
+        if m:
+            census[m.group(1)] += 1
+    return dict(census)
+
+
+def cost_analysis_flops(compiled) -> float:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return float(ca.get("flops", 0.0))
+
+
+def cost_analysis_bytes(compiled) -> float:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    if "bytes accessed" in ca:
+        return float(ca["bytes accessed"])
+    total = 0.0
+    for k, v in ca.items():
+        if k.startswith("bytes accessed"):
+            total += float(v)
+    return total
+
+
+def memory_analysis_dict(compiled) -> Dict[str, float]:
+    ma = compiled.memory_analysis()
+    out = {}
+    for name in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "generated_code_size_in_bytes",
+        "alias_size_in_bytes",
+    ):
+        if hasattr(ma, name):
+            out[name] = float(getattr(ma, name))
+    return out

@@ -1,0 +1,48 @@
+"""Logical activation-sharding constraints, mesh-agnostic at the model layer.
+
+Model code calls ``constrain(x, ("batch", "seq", None))``; whether that
+becomes a real ``with_sharding_constraint`` depends on the ambient scope the
+step builder installs at trace time. Without a scope (CPU smoke tests,
+single-device training) it is a no-op, so the same model code serves every
+environment.
+
+GSPMD needs these at layer boundaries: with FSDP-sharded weights (embed axis
+over "data") and batch-sharded activations, the contraction dimension of
+every matmul is "conflicted", and unconstrained propagation can choose to
+all-gather the *activations* (40 GB) instead of the *weights* (40 MB).
+Pinning activations at block boundaries forces the cheap choice.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+
+# spec_fn(shape, logical_axes) -> sharding or None
+_SCOPE: contextvars.ContextVar[Optional[Callable]] = contextvars.ContextVar(
+    "logical_sharding_scope", default=None
+)
+
+
+@contextlib.contextmanager
+def logical_sharding_scope(spec_fn: Callable[[Sequence[int], Sequence[Optional[str]]], Any]):
+    token = _SCOPE.set(spec_fn)
+    try:
+        yield
+    finally:
+        _SCOPE.reset(token)
+
+
+def constrain(x: jax.Array, axes: Sequence[Optional[str]]) -> jax.Array:
+    """Constrain ``x``'s sharding by logical axis names (no-op w/o scope)."""
+    spec_fn = _SCOPE.get()
+    if spec_fn is None:
+        return x
+    if len(axes) != x.ndim:
+        return x  # defensive: caller passed axes for a different rank
+    sharding = spec_fn(tuple(x.shape), tuple(axes))
+    if sharding is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, sharding)

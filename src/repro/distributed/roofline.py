@@ -1,0 +1,101 @@
+"""Three-term roofline model for TPU v5e (the assignment's §Roofline).
+
+  compute term    = HLO_FLOPs      / (chips * peak_FLOP/s)
+  memory term     = HLO_bytes      / (chips * HBM_bw)
+  collective term = collective_bytes / (chips * link_bw)
+
+Hardware constants (per the assignment): 197 TFLOP/s bf16 per chip,
+819 GB/s HBM, ~50 GB/s/link ICI. HLO_FLOPs/HLO_bytes come from
+``compiled.cost_analysis()`` on the dry-run; collective_bytes from the HLO
+parser. All quantities are whole-module (all chips), hence the division.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+PEAK_FLOPS_BF16 = 197e12  # per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link (per chip, one direction)
+DCN_BW = 25e9  # bytes/s per host for the "pod" axis (cross-pod)
+
+
+@dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    model_flops: float  # 6·N·D (dense) / 6·N_active·D (MoE); 2·N·D serve
+    pod_collective_bytes: float = 0.0  # portion crossing the DCN "pod" axis
+    notes: str = ""
+
+    @property
+    def compute_s(self) -> float:
+        return self.hlo_flops / (self.chips * PEAK_FLOPS_BF16)
+
+    @property
+    def memory_s(self) -> float:
+        return self.hlo_bytes / (self.chips * HBM_BW)
+
+    @property
+    def collective_s(self) -> float:
+        ici = (self.collective_bytes - self.pod_collective_bytes) / (self.chips * ICI_BW)
+        dcn = self.pod_collective_bytes / (max(self.chips // 256, 1) * DCN_BW)
+        return ici + dcn
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline step time = max of the three terms (perfect overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — catches remat & redundancy waste."""
+        if self.hlo_flops <= 0:
+            return 0.0
+        return self.model_flops / self.hlo_flops
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Achievable MFU at the roofline: useful FLOPs / (chips * peak *
+        step_time). This is the §Perf score for compute-bound cells; for
+        memory/collective-bound cells it is what the bottleneck allows."""
+        t = self.step_time_s
+        if t <= 0:
+            return 0.0
+        return self.model_flops / (self.chips * PEAK_FLOPS_BF16 * t)
+
+    def row(self) -> Dict[str, str]:
+        return {
+            "arch": self.arch,
+            "shape": self.shape,
+            "mesh": self.mesh,
+            "compute_s": f"{self.compute_s:.4f}",
+            "memory_s": f"{self.memory_s:.4f}",
+            "collective_s": f"{self.collective_s:.4f}",
+            "dominant": self.dominant,
+            "model/hlo_flops": f"{self.useful_flops_fraction:.3f}",
+            "roofline_frac": f"{self.roofline_fraction:.3f}",
+        }
+
+    def render(self) -> str:
+        r = self.row()
+        return (
+            f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:10s} "
+            f"C={r['compute_s']}s M={r['memory_s']}s X={r['collective_s']}s "
+            f"dom={r['dominant']:10s} useful={r['model/hlo_flops']} "
+            f"RF={r['roofline_frac']}"
+        )

@@ -1,0 +1,157 @@
+"""Logical-axis sharding rules -> PartitionSpecs / NamedShardings.
+
+One rule table covers all 10 architectures; rules are *resolved per
+(config, mesh)*: a logical axis maps onto a mesh axis only when the
+dimension divides evenly (e.g. kv_heads=8 cannot shard over model=16 and
+falls back to replication, while 96 heads shard fine). This is what makes a
+single step builder serve every (arch x shape x mesh) cell.
+
+Parallelism provided:
+  DP    batch        -> ("pod", "data")
+  FSDP  param embed  -> "data"   (ZeRO-3 style gather-on-use by GSPMD)
+  TP    heads/mlp/vocab -> "model"
+  EP    experts      -> "model"
+  SP    kv_seq       -> "model"  (decode cache ring sharding)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.layers import ParamSpec, is_spec
+
+# logical axis -> preferred mesh axes, in priority order
+DEFAULT_RULES: Dict[str, Tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "experts": ("model",),
+    "embed": ("data",),  # FSDP on parameters
+    "kv_seq": ("model",),  # decode-cache sequence sharding
+    "capacity": ("data",),  # MoE expert-capacity axis (token parallel)
+    "qk_rank": (),
+    "kv_rank": (),
+    "head_dim": (),
+    "layers": (),
+    "groups": (),
+    "state": (),
+    # Megatron-style sequence parallelism: the residual stream between
+    # blocks is sharded over "model"; attention/MLP gather it on use.
+    "seq": ("model",),
+    # SSD chunk axis: intra-chunk work is independent per chunk, so the
+    # chunk dimension shards over "model" (SSM heads often don't divide the
+    # TP degree — 24 heads on 16-way TP — but NC = S/Q does).
+    "chunks": ("model",),
+}
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    mesh_axes: Tuple[str, ...]
+    mesh_shape: Dict[str, int]
+    rules: Dict[str, Tuple[str, ...]]
+
+    def resolve(self, dim: int, logical: Optional[str]) -> Optional[Any]:
+        """Mesh axes for one tensor dimension (None = replicate)."""
+        if logical is None:
+            return None
+        prefs = self.rules.get(logical, ())
+        chosen: List[str] = []
+        remaining = dim
+        for axis in prefs:
+            if axis not in self.mesh_shape:
+                continue
+            n = self.mesh_shape[axis]
+            if remaining % n == 0 and n > 1:
+                chosen.append(axis)
+                remaining //= n
+        if not chosen:
+            return None
+        return tuple(chosen) if len(chosen) > 1 else chosen[0]
+
+    def spec_for(self, shape: Sequence[int], axes: Sequence[Optional[str]]) -> P:
+        assert len(shape) == len(axes), (shape, axes)
+        used: set = set()
+        parts: List[Any] = []
+        for dim, logical in zip(shape, axes):
+            r = self.resolve(dim, logical)
+            # a mesh axis may appear only once in a PartitionSpec
+            if r is None:
+                parts.append(None)
+            elif isinstance(r, tuple):
+                r2 = tuple(a for a in r if a not in used)
+                used.update(r2)
+                parts.append(r2 if r2 else None)
+            else:
+                if r in used:
+                    parts.append(None)
+                else:
+                    used.add(r)
+                    parts.append(r)
+        return P(*parts)
+
+
+def make_rules(mesh: Mesh, overrides: Optional[Dict[str, Tuple[str, ...]]] = None) -> ShardingRules:
+    rules = dict(DEFAULT_RULES)
+    if overrides:
+        rules.update(overrides)
+    return ShardingRules(
+        mesh_axes=tuple(mesh.axis_names),
+        mesh_shape={a: int(n) for a, n in zip(mesh.axis_names, mesh.shape.values())}
+        if isinstance(mesh.shape, dict)
+        else {a: int(n) for a, n in zip(mesh.axis_names, mesh.devices.shape)},
+        rules=rules,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Tree-level helpers
+# ---------------------------------------------------------------------------
+
+
+def param_specs(rules: ShardingRules, spec_tree: Any) -> Any:
+    """PartitionSpec tree for a ParamSpec tree."""
+    return jax.tree_util.tree_map(
+        lambda s: rules.spec_for(s.shape, s.axes), spec_tree, is_leaf=is_spec
+    )
+
+
+def tree_specs_from_axes(rules: ShardingRules, sds_tree: Any, axes_tree: Any) -> Any:
+    """PartitionSpec tree for a ShapeDtypeStruct tree + logical-axes tree."""
+    return jax.tree_util.tree_map(
+        lambda s, ax: rules.spec_for(s.shape, ax), sds_tree, axes_tree
+    )
+
+
+def shardings_from_specs(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda p: NamedSharding(mesh, p),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def batch_specs(rules: ShardingRules, batch_tree: Any, seq_axis: Optional[str] = None) -> Any:
+    """Input-batch PartitionSpecs: leading dim is the (global) batch."""
+
+    def one(sds: jax.ShapeDtypeStruct) -> P:
+        axes: List[Optional[str]] = ["batch"] + [None] * (len(sds.shape) - 1)
+        if seq_axis and len(sds.shape) >= 2:
+            axes[1] = seq_axis
+        return rules.spec_for(sds.shape, axes)
+
+    return jax.tree_util.tree_map(one, batch_tree)
+
+
+def opt_state_specs(rules: ShardingRules, param_spec_tree: Any, opt_template: Any) -> Any:
+    """Adam moments shard exactly like their parameters."""
+    from repro.optim.adamw import AdamWState
+
+    pspecs = param_specs(rules, param_spec_tree)
+    return AdamWState(count=P(), mu=pspecs, nu=pspecs)

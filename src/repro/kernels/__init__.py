@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the compute hot spots.
+
+Each subpackage: kernel.py (pl.pallas_call + BlockSpec tiling), ops.py
+(jitted public wrapper), ref.py (pure-jnp oracle). All validated in
+interpret mode on CPU (tests/test_kernels.py); TPU is the target.
+
+  flash_attention — GQA/causal blockwise online-softmax attention
+  ssd_scan        — Mamba-2 SSD chunked scan (dual quadratic form)
+  rmsnorm         — fused RMSNorm
+  swiglu          — fused SwiGLU gate
+  quorum_compare  — validator fuzzy-agreement reduction (§3.4 hot loop)
+  int8_quant      — block-scaled int8 quant/dequant (grad compression)
+"""

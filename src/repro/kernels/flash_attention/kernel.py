@@ -1,0 +1,159 @@
+"""Flash attention (forward) as a Pallas TPU kernel.
+
+Block-tiled online-softmax attention with GQA sharing expressed through
+BlockSpec index maps (no KV replication in HBM: query head h reads KV head
+h // group_size). Grid = (batch, q_heads, q_blocks, kv_blocks); the kv axis
+is the innermost, sequential ("arbitrary") dimension and carries the running
+(m, l, acc) statistics in VMEM scratch. Causal blocks above the diagonal are
+skipped entirely (no wasted MXU work), and the diagonal block is masked with
+an iota comparison.
+
+Tiling: block_q x head_dim and block_k x head_dim tiles live in VMEM; with
+the default 128x128 blocks and D<=128 the working set is
+  q (128*128) + k (128*128) + v (128*128) + acc/m/l  ~ 3.3 f32-MB << 16MB VMEM
+and every matmul is MXU-aligned (128-multiples).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    m_ref,
+    l_ref,
+    acc_ref,
+    *,
+    sm_scale: float,
+    causal: bool,
+    block_q: int,
+    block_k: int,
+    n_kv_blocks: int,
+    kv_len: int,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)  # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)  # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)  # (bk, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (bq, bk)
+        s = s * sm_scale
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        if causal:
+            qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        if kv_len % block_k:
+            s = jnp.where(kpos < kv_len, s, NEG_INF)  # mask padded keys
+
+        m_prev = m_ref[...]  # (bq, 1)
+        l_prev = l_ref[...]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)  # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+
+    if causal:
+        # skip blocks strictly above the diagonal
+        needed = k_start <= q_start + block_q - 1
+        pl.when(needed)(_body)
+        last_needed = jnp.minimum(
+            n_kv_blocks - 1, (q_start + block_q - 1) // block_k
+        )
+        is_last = ki == last_needed
+    else:
+        _body()
+        is_last = ki == n_kv_blocks - 1
+
+    @pl.when(is_last)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0, ...] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(
+    q: jax.Array,  # (B, H, Sq, D)
+    k: jax.Array,  # (B, KV, Sk, D)
+    v: jax.Array,  # (B, KV, Sk, D)
+    *,
+    causal: bool = True,
+    sm_scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+    kv_len: int | None = None,
+) -> jax.Array:
+    b, h, sq, d = q.shape
+    kv, sk = k.shape[1], k.shape[2]
+    assert h % kv == 0, (h, kv)
+    group = h // kv
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, sk, block_q, block_k)
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(d)
+    nq = sq // block_q
+    nk = sk // block_k
+
+    kernel = functools.partial(
+        _flash_kernel,
+        sm_scale=sm_scale,
+        causal=causal,
+        block_q=block_q,
+        block_k=block_k,
+        n_kv_blocks=nk,
+        kv_len=kv_len if kv_len is not None else sk,
+    )
+    grid = (b, h, nq, nk)
+    kwargs: dict[str, Any] = {}
+    if not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")
+        )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b_, h_, q_, k_: (b_, h_, q_, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b_, h_, q_, k_: (b_, h_ // group, k_, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b_, h_, q_, k_: (b_, h_ // group, k_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d), lambda b_, h_, q_, k_: (b_, h_, q_, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+        name="flash_attention_fwd",
+        **kwargs,
+    )(q, k, v)

@@ -1,0 +1,67 @@
+"""Jitted public wrapper for the flash_attention Pallas kernel.
+
+Handles layout (model code uses (B, S, H, D); the kernel wants (B, H, S, D)),
+sequence padding to block multiples, and head_dim padding to the 128-lane
+MXU width. ``interpret=True`` on CPU (tests); compiled path on TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_kernel
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret")
+)
+def flash_attention(
+    q: jax.Array,  # (B, S, H, D) — model layout
+    k: jax.Array,  # (B, S, KV, D)
+    v: jax.Array,  # (B, S, KV, D)
+    *,
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    b, s, h, d = q.shape
+    import math
+
+    sm_scale = 1.0 / math.sqrt(d)  # scale with the TRUE head dim, pre-padding
+    qt = jnp.moveaxis(q, 1, 2)
+    kt = jnp.moveaxis(k, 1, 2)
+    vt = jnp.moveaxis(v, 1, 2)
+
+    # pad head_dim to the 128 lane width
+    dpad = (-d) % 128 if d < 128 else (-d) % 128
+    if dpad:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, 0), (0, dpad)))
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, 0), (0, dpad)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, 0), (0, dpad)))
+    # pad sequence to block multiples; padded keys are masked out by causality
+    # for the padded-query rows, and sliced away for keys via masking below
+    spad = (-s) % block_q
+    if spad:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, spad), (0, 0)))
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, spad), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, spad), (0, 0)))
+
+    out = flash_attention_kernel(
+        qt,
+        kt,
+        vt,
+        causal=causal,
+        sm_scale=sm_scale,
+        block_q=block_q,
+        block_k=block_k,
+        interpret=interpret,
+        kv_len=s,
+    )
+    if spad:
+        out = out[:, :, :s, :]
+    if dpad:
+        out = out[..., :d]
+    return jnp.moveaxis(out, 1, 2)

@@ -1,0 +1,89 @@
+"""Block-scaled int8 quantize/dequantize Pallas kernels.
+
+Used by the cross-pod gradient-compression path (optim/compression.py):
+gradients are quantized per (block_rows x d) tile with an f32 scale before
+the "pod"-axis reduction, cutting DCN bytes 4x. Deterministic
+round-to-nearest-even (interpret-safe); the bias is absorbed by error
+feedback in the optimizer.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _quant_kernel(x_ref, q_ref, scale_ref):
+    x = x_ref[...].astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(x / scale), -127.0, 127.0)
+    q_ref[...] = q.astype(jnp.int8)
+    scale_ref[0, 0] = scale
+
+
+def _dequant_kernel(q_ref, scale_ref, x_ref):
+    x_ref[...] = (q_ref[...].astype(jnp.float32) * scale_ref[0, 0]).astype(x_ref.dtype)
+
+
+def _grid_kwargs(interpret: bool) -> dict[str, Any]:
+    if interpret:
+        return {}
+    return {
+        "compiler_params": pltpu.CompilerParams(dimension_semantics=("parallel",))
+    }
+
+
+def int8_quantize_kernel(
+    x: jax.Array,  # (rows, d)
+    *,
+    block_rows: int = 256,
+    interpret: bool = False,
+):
+    rows, d = x.shape
+    assert rows % block_rows == 0
+    nb = rows // block_rows
+    return pl.pallas_call(
+        _quant_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((block_rows, d), lambda r: (r, 0))],
+        out_specs=[
+            pl.BlockSpec((block_rows, d), lambda r: (r, 0)),
+            pl.BlockSpec((1, 1), lambda r: (r, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, d), jnp.int8),
+            jax.ShapeDtypeStruct((nb, 1), jnp.float32),
+        ],
+        interpret=interpret,
+        name="int8_quantize",
+        **_grid_kwargs(interpret),
+    )(x)
+
+
+def int8_dequantize_kernel(
+    q: jax.Array,  # (rows, d) int8
+    scales: jax.Array,  # (nb, 1) f32
+    *,
+    block_rows: int = 256,
+    out_dtype: Any = jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    rows, d = q.shape
+    nb = rows // block_rows
+    return pl.pallas_call(
+        _dequant_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda r: (r, 0)),
+            pl.BlockSpec((1, 1), lambda r: (r, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), out_dtype),
+        interpret=interpret,
+        name="int8_dequantize",
+        **_grid_kwargs(interpret),
+    )(q, scales)

@@ -1,0 +1,61 @@
+"""Jitted wrappers: array-shaped round trip used by optim/compression.py."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import int8_dequantize_kernel, int8_quantize_kernel
+
+_LANES = 256
+
+
+def _to_rows(x: jax.Array) -> Tuple[jax.Array, int, Tuple[int, ...]]:
+    shape = x.shape
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % _LANES
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, _LANES), n, shape
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def int8_quantize(x: jax.Array, *, block_rows: int = 256, interpret: bool = False):
+    rows2d, n, shape = _to_rows(x)
+    rows = rows2d.shape[0]
+    br = min(block_rows, rows)
+    rpad = (-rows) % br
+    if rpad:
+        rows2d = jnp.pad(rows2d, ((0, rpad), (0, 0)))
+    q, scales = int8_quantize_kernel(rows2d, block_rows=br, interpret=interpret)
+    return q, scales
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_rows", "n", "shape", "out_dtype", "interpret")
+)
+def int8_dequantize(
+    q: jax.Array,
+    scales: jax.Array,
+    *,
+    n: int,
+    shape: Tuple[int, ...],
+    block_rows: int = 256,
+    out_dtype: Any = jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    rows = q.shape[0]
+    br = min(block_rows, rows)
+    x = int8_dequantize_kernel(q, scales, block_rows=br, out_dtype=out_dtype, interpret=interpret)
+    return x.reshape(-1)[:n].reshape(shape)
+
+
+def quantize_dequantize(x: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """Round-trip helper (what the compression path applies per shard)."""
+    q, s = int8_quantize(x, interpret=interpret)
+    return int8_dequantize(
+        q, s, n=x.size, shape=tuple(x.shape), out_dtype=x.dtype, interpret=interpret
+    )

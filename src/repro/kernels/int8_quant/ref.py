@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the int8 block-quant kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def int8_quantize_ref(x: jax.Array, block_rows: int):
+    rows, d = x.shape
+    nb = rows // block_rows
+    xb = x.astype(jnp.float32).reshape(nb, block_rows, d)
+    amax = jnp.max(jnp.abs(xb), axis=(1, 2), keepdims=True)
+    scale = jnp.maximum(amax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(xb / scale), -127, 127).astype(jnp.int8)
+    return q.reshape(rows, d), scale.reshape(nb, 1)
+
+
+def int8_dequantize_ref(q: jax.Array, scales: jax.Array, block_rows: int, out_dtype=jnp.float32):
+    rows, d = q.shape
+    nb = rows // block_rows
+    qb = q.astype(jnp.float32).reshape(nb, block_rows, d)
+    x = qb * scales.reshape(nb, 1, 1)
+    return x.reshape(rows, d).astype(out_dtype)

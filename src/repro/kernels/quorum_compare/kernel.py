@@ -1,0 +1,73 @@
+"""Fuzzy quorum comparison as a Pallas TPU kernel.
+
+This is the hardware adaptation of the paper's validator hot loop (§3.4):
+at gradient scale, deciding whether two replicas' results "agree within
+tolerances" is a bandwidth-bound reduction over billions of elements. The
+kernel counts out-of-tolerance elements (|a-b| > atol + rtol*|b|) per block
+and accumulates into a scalar — one pass over both operands, no giant bool
+intermediates in HBM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _quorum_kernel(a_ref, b_ref, count_ref, sq_ref, *, rtol: float, atol: float):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        count_ref[...] = jnp.zeros_like(count_ref)
+        sq_ref[...] = jnp.zeros_like(sq_ref)
+
+    a = a_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    diff = jnp.abs(a - b)
+    bad = diff > (atol + rtol * jnp.abs(b))
+    count_ref[0, 0] += jnp.sum(bad.astype(jnp.float32))
+    sq_ref[0, 0] += jnp.sum(diff * diff)
+
+
+def quorum_compare_kernel(
+    a: jax.Array,  # (rows, d) — flattened payload
+    b: jax.Array,
+    *,
+    rtol: float = 1e-5,
+    atol: float = 1e-8,
+    block_rows: int = 1024,
+    interpret: bool = False,
+):
+    rows, d = a.shape
+    assert rows % block_rows == 0
+    kernel = functools.partial(_quorum_kernel, rtol=rtol, atol=atol)
+    kwargs: dict[str, Any] = {}
+    if not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)
+        )
+    count, sq = pl.pallas_call(
+        kernel,
+        grid=(rows // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda r: (r, 0)),
+            pl.BlockSpec((block_rows, d), lambda r: (r, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda r: (0, 0)),
+            pl.BlockSpec((1, 1), lambda r: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+        name="quorum_compare",
+        **kwargs,
+    )(a, b)
+    return count[0, 0], sq[0, 0]

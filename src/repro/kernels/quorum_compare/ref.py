@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the quorum_compare kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quorum_compare_ref(a: jax.Array, b: jax.Array, rtol: float = 1e-5, atol: float = 1e-8):
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    diff = jnp.abs(af - bf)
+    bad = diff > (atol + rtol * jnp.abs(bf))
+    return jnp.sum(bad.astype(jnp.float32)), jnp.sum(diff * diff)

@@ -1,0 +1,52 @@
+"""Fused RMSNorm Pallas kernel (bandwidth-bound: one HBM read, one write).
+
+Grid over row blocks; each instance normalizes a (block_rows, d) tile in
+VMEM. f32 statistics regardless of input dtype.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rmsnorm_kernel(x_ref, scale_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * scale_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def rmsnorm_kernel(
+    x: jax.Array,  # (rows, d)
+    scale: jax.Array,  # (d,)
+    *,
+    eps: float = 1e-6,
+    block_rows: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    rows, d = x.shape
+    assert rows % block_rows == 0, (rows, block_rows)
+    kernel = functools.partial(_rmsnorm_kernel, eps=eps)
+    kwargs: dict[str, Any] = {}
+    if not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel",)
+        )
+    return pl.pallas_call(
+        kernel,
+        grid=(rows // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda r: (r, 0)),
+            pl.BlockSpec((d,), lambda r: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        interpret=interpret,
+        name="rmsnorm",
+        **kwargs,
+    )(x, scale)

@@ -1,0 +1,32 @@
+"""Jitted wrapper: flattens (..., d) to rows, pads to the row-block size."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import rmsnorm_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def rmsnorm(
+    x: jax.Array,
+    scale: jax.Array,
+    *,
+    eps: float = 1e-6,
+    block_rows: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    shape = x.shape
+    d = shape[-1]
+    xf = x.reshape(-1, d)
+    rows = xf.shape[0]
+    br = min(block_rows, rows) if rows else 1
+    pad = (-rows) % br
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    out = rmsnorm_kernel(xf, scale, eps=eps, block_rows=br, interpret=interpret)
+    if pad:
+        out = out[:rows]
+    return out.reshape(shape)

@@ -1,0 +1,41 @@
+"""Jitted wrapper for the SSD Pallas kernel: model layout -> kernel layout,
+chunk padding (dt=0 padding is an exact no-op on the recurrence)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssd_scan_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "interpret"))
+def ssd_scan(
+    x: jax.Array,  # (B, S, H, P) — model layout
+    dt: jax.Array,  # (B, S, H)
+    A: jax.Array,  # (H,)
+    Bm: jax.Array,  # (B, S, G, N)
+    Cm: jax.Array,  # (B, S, G, N)
+    *,
+    block_q: int = 128,
+    interpret: bool = False,
+):
+    b, s, h, p = x.shape
+    pad = (-s) % block_q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    xt = jnp.moveaxis(x, 1, 2)  # (B,H,S,P)
+    dtt = jnp.moveaxis(dt, 1, 2)[..., None]  # (B,H,S,1)
+    bt = jnp.moveaxis(Bm, 1, 2)  # (B,G,S,N)
+    ct = jnp.moveaxis(Cm, 1, 2)
+    y, final_state = ssd_scan_kernel(
+        xt, dtt, A[:, None], bt, ct, block_q=block_q, interpret=interpret
+    )
+    y = jnp.moveaxis(y, 1, 2)
+    if pad:
+        y = y[:, :s]
+    return y, final_state

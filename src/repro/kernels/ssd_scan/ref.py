@@ -1,0 +1,39 @@
+"""Sequential-recurrence oracle for the SSD kernel (a *different* algorithm
+from the kernel's chunked dual form, making the allclose check meaningful):
+
+  s_t = exp(dt_t * A) * s_{t-1} + dt_t * (B_t (x) x_t)
+  y_t = C_t . s_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(
+    x: jax.Array,  # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H)
+    A: jax.Array,  # (H,)
+    Bm: jax.Array,  # (B, S, G, N)
+    Cm: jax.Array,  # (B, S, G, N)
+):
+    b, s, h, p = x.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    rep = h // g
+    Bh = jnp.repeat(Bm, rep, axis=2).astype(jnp.float32)  # (B,S,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=2).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    def step(state, t):
+        decay = jnp.exp(dtf[:, t] * Af[None, :])  # (B,H)
+        upd = (dtf[:, t, :, None] * xf[:, t])[..., None] * Bh[:, t, :, None, :]
+        state = state * decay[..., None, None] + upd  # (B,H,P,N)
+        y = jnp.einsum("bhn,bhpn->bhp", Ch[:, t], state)
+        return state, y
+
+    state0 = jnp.zeros((b, h, p, n), jnp.float32)
+    final, ys = jax.lax.scan(step, state0, jnp.arange(s))
+    y = jnp.moveaxis(ys, 0, 1)  # (B,S,H,P)
+    return y.astype(x.dtype), final

@@ -1,0 +1,44 @@
+"""Fused SwiGLU Pallas kernel: out = silu(gate) * up, one pass over HBM."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _swiglu_kernel(g_ref, u_ref, o_ref):
+    g = g_ref[...].astype(jnp.float32)
+    u = u_ref[...].astype(jnp.float32)
+    o_ref[...] = (g * jax.lax.logistic(g) * u).astype(o_ref.dtype)
+
+
+def swiglu_kernel(
+    gate: jax.Array,  # (rows, f)
+    up: jax.Array,  # (rows, f)
+    *,
+    block_rows: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    rows, f = gate.shape
+    assert rows % block_rows == 0
+    kwargs: dict[str, Any] = {}
+    if not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel",)
+        )
+    return pl.pallas_call(
+        _swiglu_kernel,
+        grid=(rows // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, f), lambda r: (r, 0)),
+            pl.BlockSpec((block_rows, f), lambda r: (r, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, f), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, f), gate.dtype),
+        interpret=interpret,
+        name="swiglu",
+        **kwargs,
+    )(gate, up)

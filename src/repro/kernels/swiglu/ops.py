@@ -1,0 +1,33 @@
+"""Jitted wrapper for the fused SwiGLU kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import swiglu_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def swiglu(
+    gate: jax.Array,
+    up: jax.Array,
+    *,
+    block_rows: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    shape = gate.shape
+    f = shape[-1]
+    g = gate.reshape(-1, f)
+    u = up.reshape(-1, f)
+    rows = g.shape[0]
+    br = min(block_rows, rows) if rows else 1
+    pad = (-rows) % br
+    if pad:
+        g = jnp.pad(g, ((0, pad), (0, 0)))
+        u = jnp.pad(u, ((0, pad), (0, 0)))
+    out = swiglu_kernel(g, u, block_rows=br, interpret=interpret)
+    if pad:
+        out = out[:rows]
+    return out.reshape(shape)

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the swiglu kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def swiglu_ref(gate: jax.Array, up: jax.Array) -> jax.Array:
+    gf = gate.astype(jnp.float32)
+    return (jax.nn.silu(gf) * up.astype(jnp.float32)).astype(gate.dtype)

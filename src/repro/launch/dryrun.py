@@ -1,0 +1,185 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+# The two lines above MUST run before any other import (jax locks the device
+# count on first init). Everything below is the multi-pod dry-run driver.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell with
+ShapeDtypeStruct stand-ins (no allocation), print memory/cost analysis, and
+derive the three roofline terms (EXPERIMENTS.md §Dry-run / §Roofline).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k --multi-pod
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--json out.json]
+
+Exit code 0 only if every requested cell compiles.
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+
+from repro.configs import ARCHS, get_config
+from repro.distributed.hlo_analysis import (
+    cost_analysis_bytes,
+    cost_analysis_flops,
+    memory_analysis_dict,
+    op_census,
+)
+from repro.distributed.hlo_costs import analyze_module
+from repro.distributed.roofline import RooflineTerms
+from repro.launch.mesh import make_production_mesh, mesh_name
+from repro.models.config import SHAPES, cell_supported, get_shape
+from repro.runtime.step_builder import build_step, model_flops_for_cell
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool = False,
+    verbose: bool = True,
+    rules_overrides: Optional[Dict] = None,
+) -> Dict[str, Any]:
+    """Lower + compile one cell; returns the record for EXPERIMENTS.md."""
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    ok, why = cell_supported(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "status": "skipped", "reason": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    t0 = time.time()
+    bundle = build_step(cfg, shape, mesh, rules_overrides=rules_overrides)
+    lowered = bundle.lower()
+    t_lower = time.time() - t0
+    hlo_text = lowered.as_text()
+    t1 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t1
+
+    mem = memory_analysis_dict(compiled)
+    try:
+        opt_text = compiled.as_text()
+    except Exception:
+        opt_text = hlo_text
+    # XLA's cost_analysis counts while (scan) bodies ONCE; analyze_module
+    # parses the optimized per-device module, extracts loop trip counts, and
+    # rolls up flops/bytes/collectives with multipliers. Everything below is
+    # per-device x chips = whole-module totals, matching the roofline's
+    # "/ (chips * bw)" convention.
+    costs = analyze_module(opt_text)
+    flops = costs.flops * chips
+    hbm_bytes = costs.bytes * chips
+    model_flops = model_flops_for_cell(cfg, shape)
+
+    terms = RooflineTerms(
+        arch=arch,
+        shape=shape_name,
+        mesh=mesh_name(mesh),
+        chips=chips,
+        hlo_flops=flops,
+        hlo_bytes=hbm_bytes,
+        collective_bytes=costs.total_collective_bytes * chips,
+        model_flops=model_flops,
+    )
+    per_dev_bytes = (
+        mem.get("argument_size_in_bytes", 0)
+        + mem.get("output_size_in_bytes", 0)
+        - mem.get("alias_size_in_bytes", 0)
+        + mem.get("temp_size_in_bytes", 0)
+    )
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name(mesh),
+        "status": "ok",
+        "chips": chips,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory_analysis": mem,
+        "per_device_bytes": per_dev_bytes,
+        "hlo_flops": flops,
+        "hlo_bytes": hbm_bytes,
+        "collective_bytes": costs.total_collective_bytes * chips,
+        "collectives": {k: v * chips for k, v in costs.collective_bytes.items()},
+        "collective_counts": dict(costs.collective_counts),
+        "xla_flops_once": cost_analysis_flops(compiled) * chips,  # cross-check
+        "model_flops": model_flops,
+        "while_trips": dict(costs.while_trips),
+        "roofline": terms.row(),
+    }
+    if verbose:
+        coll_str = "; ".join(
+            f"{k}: n={costs.collective_counts[k]:g} bytes={v*chips:,.0f}"
+            for k, v in sorted(costs.collective_bytes.items())
+        ) or "none"
+        print(f"=== {arch} x {shape_name} @ {mesh_name(mesh)} ===")
+        print(f"  lower {t_lower:.1f}s, compile {t_compile:.1f}s")
+        print(f"  memory_analysis: {mem}")
+        print(f"  per-device bytes: {per_dev_bytes/1e9:.3f} GB  (HBM 16 GB)")
+        print(f"  hlo totals: flops={flops:.3e} bytes={hbm_bytes:.3e} trips={costs.while_trips}")
+        print(f"  collectives (totals): {coll_str}")
+        print(f"  roofline: {terms.render()}")
+    return record
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--arch", choices=ARCHS)
+    p.add_argument("--shape", choices=[s.name for s in SHAPES])
+    p.add_argument("--all", action="store_true", help="every (arch x shape)")
+    p.add_argument("--multi-pod", action="store_true", help="2x16x16 mesh")
+    p.add_argument("--both-meshes", action="store_true")
+    p.add_argument("--json", help="append JSONL records here")
+    args = p.parse_args()
+
+    cells = []
+    if args.all:
+        for a in ARCHS:
+            for s in SHAPES:
+                cells.append((a, s.name))
+    else:
+        if not args.arch or not args.shape:
+            p.error("--arch and --shape required unless --all")
+        cells.append((args.arch, args.shape))
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    failures = 0
+    records = []
+    for arch, shape in cells:
+        for mp in meshes:
+            try:
+                rec = run_cell(arch, shape, multi_pod=mp)
+            except Exception as e:
+                traceback.print_exc()
+                rec = {
+                    "arch": arch,
+                    "shape": shape,
+                    "multi_pod": mp,
+                    "status": "error",
+                    "error": f"{type(e).__name__}: {e}",
+                }
+                failures += 1
+            records.append(rec)
+            if args.json:
+                with open(args.json, "a") as f:
+                    f.write(json.dumps(rec) + "\n")
+
+    n_ok = sum(1 for r in records if r["status"] == "ok")
+    n_skip = sum(1 for r in records if r["status"] == "skipped")
+    print(f"\ndry-run: {n_ok} ok, {n_skip} skipped, {failures} failed")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

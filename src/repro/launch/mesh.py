@@ -1,0 +1,56 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state. The dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax import;
+everything else sees the real device count.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """The assignment's production mesh: (16,16) single pod = 256 chips,
+    (2,16,16) multi-pod = 512 chips over ("pod","data","model")."""
+    import jax
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devices) > n:
+        # e.g. single-pod mesh inside the 512-device dry-run process
+        from jax.sharding import Mesh
+
+        return Mesh(np.array(devices[:n]).reshape(shape), axes)
+    raise RuntimeError(
+        f"need {n} devices for mesh {shape}, have {len(devices)} "
+        "(dry-run must set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+        "before importing jax)"
+    )
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]):
+    """Arbitrary mesh over the first prod(shape) devices (tests, elastic)."""
+    import jax
+    from jax.sharding import Mesh
+
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(f"need {n} devices, have {len(devices)}")
+    return Mesh(np.array(devices[:n]).reshape(tuple(shape)), tuple(axes))
+
+
+def single_device_mesh():
+    """1x1 mesh over the local device (smoke tests)."""
+    return make_mesh((1, 1), ("data", "model"))
+
+
+def mesh_name(mesh) -> str:
+    return "x".join(str(s) for s in mesh.devices.shape) + ":" + ",".join(mesh.axis_names)

@@ -1,0 +1,85 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Perf-iteration driver: compile one cell with config/rule overrides and
+print the roofline terms + the largest collectives (the 'profile' of the
+dry-run methodology). Used by the §Perf hillclimb loop.
+
+    PYTHONPATH=src python -m repro.launch.perf_iter --arch X --shape Y \
+        [--set remat_policy=dots_nb] [--set ssm_chunk=128] [--multi-pod]
+"""
+import argparse
+import json
+import sys
+
+import jax
+
+from repro.configs import ARCHS, get_config
+from repro.distributed.hlo_analysis import collective_stats, memory_analysis_dict
+from repro.distributed.hlo_costs import analyze_module
+from repro.distributed.roofline import RooflineTerms
+from repro.launch.mesh import make_production_mesh, mesh_name
+from repro.models.config import SHAPES, get_shape
+from repro.runtime.step_builder import build_step, model_flops_for_cell
+
+
+def run_iteration(arch, shape_name, overrides=None, rules_overrides=None,
+                  multi_pod=False, top=8, verbose=True):
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.scaled(**overrides)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    bundle = build_step(cfg, shape, mesh, rules_overrides=rules_overrides)
+    compiled = bundle.lower().compile()
+    text = compiled.as_text()
+    costs = analyze_module(text)
+    mem = memory_analysis_dict(compiled)
+    per_dev = (
+        mem.get("argument_size_in_bytes", 0)
+        + mem.get("output_size_in_bytes", 0)
+        - mem.get("alias_size_in_bytes", 0)
+        + mem.get("temp_size_in_bytes", 0)
+    )
+    terms = RooflineTerms(
+        arch=arch, shape=shape_name, mesh=mesh_name(mesh), chips=chips,
+        hlo_flops=costs.flops * chips, hlo_bytes=costs.bytes * chips,
+        collective_bytes=costs.total_collective_bytes * chips,
+        model_flops=model_flops_for_cell(cfg, shape),
+    )
+    if verbose:
+        print(f"--- {arch} x {shape_name} overrides={overrides} rules={rules_overrides} ---")
+        print(f"  HBM/dev: {per_dev/1e9:.1f} GB   {terms.render()}")
+        print(f"  collectives/dev: " + "; ".join(
+            f"{k}={v/1e9:.1f}GB(n={costs.collective_counts[k]:g})"
+            for k, v in sorted(costs.collective_bytes.items(), key=lambda kv: -kv[1])
+        ))
+        st = collective_stats(text)
+        for nbytes, line in st.largest[:top]:
+            print(f"    {nbytes/1e9:7.2f} GB/dev-use  {line[:130]}")
+    return terms, costs, per_dev
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", choices=ARCHS, required=True)
+    p.add_argument("--shape", choices=[s.name for s in SHAPES], required=True)
+    p.add_argument("--set", action="append", default=[], help="cfg override k=v")
+    p.add_argument("--multi-pod", action="store_true")
+    args = p.parse_args()
+    overrides = {}
+    for kv in getattr(args, "set"):
+        k, v = kv.split("=", 1)
+        try:
+            v = json.loads(v)
+        except Exception:
+            pass
+        overrides[k] = v
+    run_iteration(args.arch, args.shape, overrides or None, multi_pod=args.multi_pod)
+
+
+if __name__ == "__main__":
+    main()

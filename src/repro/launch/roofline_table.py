@@ -1,0 +1,86 @@
+"""Render the EXPERIMENTS.md roofline table from dry-run JSONL records.
+
+    PYTHONPATH=src python -m repro.launch.roofline_table results/dryrun_baseline.jsonl
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import Dict, List
+
+from repro.distributed.roofline import RooflineTerms
+
+
+def load(path: str) -> List[Dict]:
+    recs = []
+    with open(path) as f:
+        for line in f:
+            recs.append(json.loads(line))
+    return recs
+
+
+def to_terms(r: Dict) -> RooflineTerms:
+    return RooflineTerms(
+        arch=r["arch"],
+        shape=r["shape"],
+        mesh=r["mesh"],
+        chips=r["chips"],
+        hlo_flops=r["hlo_flops"],
+        hlo_bytes=r["hlo_bytes"],
+        collective_bytes=r["collective_bytes"],
+        model_flops=r["model_flops"],
+    )
+
+
+def render_table(recs: List[Dict], mesh_filter: str = "16x16") -> str:
+    rows = []
+    header = (
+        "| arch | shape | C (s) | M (s) | X (s) | dominant | HBM GB/dev | "
+        "useful | RF |"
+    )
+    sep = "|" + "---|" * 9
+    rows.append(header)
+    rows.append(sep)
+    seen = set()
+    for r in recs:
+        if r["status"] == "skipped":
+            key = (r["arch"], r["shape"])
+            if key not in seen:
+                seen.add(key)
+                rows.append(
+                    f"| {r['arch']} | {r['shape']} | — | — | — | skipped | — | — | — |"
+                )
+            continue
+        if r["status"] != "ok" or not r["mesh"].startswith(mesh_filter):
+            continue
+        t = to_terms(r)
+        gb = r.get("per_device_bytes", 0) / 1e9
+        rows.append(
+            f"| {t.arch} | {t.shape} | {t.compute_s:.4f} | {t.memory_s:.4f} | "
+            f"{t.collective_s:.4f} | {t.dominant} | {gb:.1f} | "
+            f"{t.useful_flops_fraction:.3f} | {t.roofline_fraction:.3f} |"
+        )
+    return "\n".join(rows)
+
+
+def pick_hillclimb(recs: List[Dict]) -> None:
+    ok = [r for r in recs if r["status"] == "ok" and r["mesh"].startswith("16x16")
+          and r["shape"].startswith("train")]
+    terms = [(to_terms(r), r) for r in ok]
+    worst_rf = min(terms, key=lambda t: t[0].roofline_fraction)
+    most_coll = max(terms, key=lambda t: t[0].collective_s / max(t[0].step_time_s, 1e-12))
+    print("\nworst roofline fraction:", worst_rf[0].arch, worst_rf[0].shape,
+          f"RF={worst_rf[0].roofline_fraction:.4f}")
+    print("most collective-bound:", most_coll[0].arch, most_coll[0].shape,
+          f"X/t={most_coll[0].collective_s / max(most_coll[0].step_time_s, 1e-12):.3f}")
+
+
+def main() -> None:
+    path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun_baseline.jsonl"
+    recs = load(path)
+    print(render_table(recs))
+    pick_hillclimb(recs)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Model zoo: the 'apps' the BOINC grid schedules."""
+from .config import SHAPES, ModelConfig, ShapeConfig, cell_supported, get_shape
+from .layers import (
+    ParamSpec,
+    abstract_params,
+    axes_tree,
+    count_params,
+    init_params,
+)
+from .transformer import (
+    cache_axes,
+    cache_spec,
+    forward,
+    init_cache,
+    model_spec,
+    train_loss,
+)
+
+__all__ = [
+    "SHAPES",
+    "ModelConfig",
+    "ParamSpec",
+    "ShapeConfig",
+    "abstract_params",
+    "axes_tree",
+    "cache_axes",
+    "cache_spec",
+    "cell_supported",
+    "count_params",
+    "forward",
+    "get_shape",
+    "init_cache",
+    "init_params",
+    "model_spec",
+    "train_loss",
+]

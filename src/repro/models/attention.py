@@ -1,0 +1,336 @@
+"""Attention variants: GQA (w/ qk-norm) and MLA, training + cached decode.
+
+Training/prefill uses a **block-wise attention** formulation: an unrolled
+loop over query chunks where chunk *i* only attends to its key prefix. This
+keeps peak memory at (B, H, cq, S) per layer, wastes no FLOPs on the masked
+upper triangle (chunks above the diagonal are never computed), and mirrors
+the tiling of the Pallas ``flash_attention`` kernel (the TPU-target path).
+
+Decode uses a pre-allocated KV cache laid out (B, S_max, KV, D) whose
+sequence axis is sharded over the "model" mesh axis (ring-attention style):
+per-shard partial softmax statistics are combined by GSPMD's small
+all-reduces instead of ever gathering the cache.
+
+MLA (DeepSeek-V2 / MiniCPM3) caches the compressed latent + decoupled RoPE
+key and uses the *absorbed* formulation at decode time: W_uk is folded into
+the query and W_uv into the output so scores are taken directly against the
+(B, S, rank) latent.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import ParamSpec, apply_rope, head_rms_norm
+from repro.distributed.logical import constrain
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+
+def gqa_spec(
+    d_model: int,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    qk_norm: bool = False,
+    bias: bool = False,
+) -> Dict[str, ParamSpec]:
+    spec = {
+        "wq": ParamSpec((d_model, n_heads, head_dim), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d_model, n_kv_heads, head_dim), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((d_model, n_kv_heads, head_dim), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((n_heads, head_dim, d_model), ("heads", "head_dim", "embed")),
+    }
+    if qk_norm:
+        spec["q_norm"] = ParamSpec((head_dim,), ("head_dim",), init="ones")
+        spec["k_norm"] = ParamSpec((head_dim,), ("head_dim",), init="ones")
+    return spec
+
+
+def mla_spec(
+    d_model: int,
+    n_heads: int,
+    q_lora_rank: int,
+    kv_lora_rank: int,
+    qk_nope_dim: int,
+    qk_rope_dim: int,
+    v_head_dim: int,
+) -> Dict[str, ParamSpec]:
+    return {
+        "wq_a": ParamSpec((d_model, q_lora_rank), ("embed", "qk_rank")),
+        "q_a_norm": ParamSpec((q_lora_rank,), ("qk_rank",), init="ones"),
+        "wq_b": ParamSpec(
+            (q_lora_rank, n_heads, qk_nope_dim + qk_rope_dim),
+            ("qk_rank", "heads", "head_dim"),
+        ),
+        "wkv_a": ParamSpec((d_model, kv_lora_rank + qk_rope_dim), ("embed", "kv_rank")),
+        "kv_a_norm": ParamSpec((kv_lora_rank,), ("kv_rank",), init="ones"),
+        "wk_b": ParamSpec(
+            (kv_lora_rank, n_heads, qk_nope_dim), ("kv_rank", "heads", "head_dim")
+        ),
+        "wv_b": ParamSpec(
+            (kv_lora_rank, n_heads, v_head_dim), ("kv_rank", "heads", "head_dim")
+        ),
+        "wo": ParamSpec((n_heads, v_head_dim, d_model), ("heads", "head_dim", "embed")),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Block-wise softmax attention (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _chunked_attention(
+    q: jax.Array,  # (B, S, H, D)
+    k: jax.Array,  # (B, S, KV, D)
+    v: jax.Array,  # (B, S, KV, D)
+    causal: bool,
+    chunk: int = 1024,
+) -> jax.Array:
+    """Unrolled query-chunk attention; chunk i attends keys [0, (i+1)*cq).
+
+    GQA is handled by expanding K/V to the full head count up front (a
+    sharded gather) instead of reshaping Q to (KV, G): reshaping the head
+    axis would break its "model" sharding (96 heads tiled 16 ways cannot be
+    re-tiled as (8, 12) in place), whereas the expanded K/V stays
+    head-sharded and costs only (B, S, H_local, D) bytes per device.
+    """
+    b, s, h, d = q.shape
+    kv = k.shape[2]
+    groups = h // kv
+    scale = 1.0 / math.sqrt(d)
+    if groups > 1:
+        k = constrain(jnp.repeat(k, groups, axis=2), ("batch", None, "heads", None))
+        v = constrain(jnp.repeat(v, groups, axis=2), ("batch", None, "heads", None))
+    cq = min(chunk, s)
+    n_chunks = (s + cq - 1) // cq
+    outs = []
+    for i in range(n_chunks):
+        lo = i * cq
+        hi = min(s, lo + cq)
+        qc = jax.lax.slice_in_dim(q, lo, hi, axis=1)  # (B, cq, H, D)
+        k_hi = hi if causal else s
+        kc = jax.lax.slice_in_dim(k, 0, k_hi, axis=1)
+        vc = jax.lax.slice_in_dim(v, 0, k_hi, axis=1)
+        scores = jnp.einsum("bqhd,bshd->bhqs", qc, kc) * scale
+        scores = scores.astype(jnp.float32)
+        if causal:
+            qpos = lo + jnp.arange(hi - lo)
+            kpos = jnp.arange(k_hi)
+            mask = kpos[None, :] <= qpos[:, None]
+            scores = jnp.where(mask[None, None], scores, -1e30)
+        w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        oc = jnp.einsum("bhqs,bshd->bqhd", w, vc)
+        outs.append(oc)
+    return jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+
+
+# ---------------------------------------------------------------------------
+# GQA forward (train / prefill / decode)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class AttnConfig:
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    rope_theta: float = 10000.0
+    qk_norm: bool = False
+    causal: bool = True
+    use_rope: bool = True
+    norm_eps: float = 1e-6
+    chunk: int = 1024
+
+
+def gqa_forward(
+    params: Dict[str, jax.Array],
+    x: jax.Array,  # (B, S, d_model)
+    cfg: AttnConfig,
+    positions: Optional[jax.Array] = None,
+    cache: Optional[Dict[str, jax.Array]] = None,
+    cache_index: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Returns (out, updated_cache).
+
+    * train:              cache=None                       — full pass
+    * prefill:            cache=zeros, cache_index=0       — writes [0, S)
+    * decode (S == 1):    cache=state,  cache_index=t      — appends + attends
+    """
+    dt = x.dtype
+    b, s, _ = x.shape
+    # seq=None: attention needs the full sequence — this is the SP
+    # all-gather boundary; heads shard over "model" instead
+    q = constrain(jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt)), ("batch", None, "heads", None))
+    k = constrain(jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dt)), ("batch", None, "kv_heads", None))
+    v = constrain(jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dt)), ("batch", None, "kv_heads", None))
+    if cfg.qk_norm:
+        q = head_rms_norm(params["q_norm"], q, cfg.norm_eps)
+        k = head_rms_norm(params["k_norm"], k, cfg.norm_eps)
+    if positions is None:
+        base = cache_index if cache_index is not None else 0
+        positions = base + jnp.arange(s)[None, :]
+        positions = jnp.broadcast_to(positions, (b, s))
+    if cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    if cache is None:
+        out = _chunked_attention(q, k, v, cfg.causal, cfg.chunk)
+        new_cache = None
+    else:
+        idx = cache_index if cache_index is not None else jnp.asarray(0, jnp.int32)
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), idx, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), idx, axis=1)
+        new_cache = {"k": ck, "v": cv}
+        if s == 1:
+            out = _decode_attend(q, ck, cv, idx)
+        else:
+            # prefill: attend within the fresh segment only
+            out = _chunked_attention(q, k, v, cfg.causal, cfg.chunk)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt)), new_cache
+
+
+def _decode_attend(q: jax.Array, ck: jax.Array, cv: jax.Array, idx: jax.Array) -> jax.Array:
+    """Single-token attention over the cache (seq axis may be sharded)."""
+    b, one, h, d = q.shape
+    kv = ck.shape[2]
+    groups = h // kv
+    scale = 1.0 / math.sqrt(d)
+    qg = q.reshape(b, kv, groups, d)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg, ck) * scale
+    scores = scores.astype(jnp.float32)
+    smax = ck.shape[1]
+    valid = jnp.arange(smax)[None, None, None, :] <= idx
+    scores = jnp.where(valid, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgs,bskd->bkgd", w, cv)
+    return out.reshape(b, 1, h, d)
+
+
+def gqa_cache_shape(
+    batch: int, max_seq: int, n_kv_heads: int, head_dim: int, dtype: Any = jnp.bfloat16
+) -> Dict[str, jax.ShapeDtypeStruct]:
+    shp = (batch, max_seq, n_kv_heads, head_dim)
+    return {
+        "k": jax.ShapeDtypeStruct(shp, dtype),
+        "v": jax.ShapeDtypeStruct(shp, dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLA forward
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    n_heads: int
+    q_lora_rank: int
+    kv_lora_rank: int
+    qk_nope_dim: int
+    qk_rope_dim: int
+    v_head_dim: int
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    chunk: int = 1024
+
+
+def _mla_qkv(params, x, cfg: MLAConfig, positions):
+    from .layers import rms_norm
+
+    dt = x.dtype
+    cq = jnp.einsum("bsd,dr->bsr", x, params["wq_a"].astype(dt))
+    cq = rms_norm({"scale": params["q_a_norm"]}, cq, cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", cq, params["wq_b"].astype(dt))
+    q_nope, q_pe = q[..., : cfg.qk_nope_dim], q[..., cfg.qk_nope_dim :]
+    q_pe = apply_rope(q_pe, positions, cfg.rope_theta)
+
+    ckv_full = jnp.einsum("bsd,dr->bsr", x, params["wkv_a"].astype(dt))
+    c_kv = ckv_full[..., : cfg.kv_lora_rank]
+    k_pe = ckv_full[..., cfg.kv_lora_rank :][:, :, None, :]  # (B,S,1,rope)
+    c_kv = rms_norm({"scale": params["kv_a_norm"]}, c_kv, cfg.norm_eps)
+    k_pe = apply_rope(k_pe, positions, cfg.rope_theta)
+    return q_nope, q_pe, c_kv, k_pe
+
+
+def mla_forward(
+    params: Dict[str, jax.Array],
+    x: jax.Array,
+    cfg: MLAConfig,
+    positions: Optional[jax.Array] = None,
+    cache: Optional[Dict[str, jax.Array]] = None,
+    cache_index: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    dt = x.dtype
+    b, s, _ = x.shape
+    if positions is None:
+        base = cache_index if cache_index is not None else 0
+        positions = base + jnp.arange(s)[None, :]
+        positions = jnp.broadcast_to(positions, (b, s))
+    q_nope, q_pe, c_kv, k_pe = _mla_qkv(params, x, cfg, positions)
+
+    if cache is not None:
+        idx = cache_index if cache_index is not None else jnp.asarray(0, jnp.int32)
+        cc = jax.lax.dynamic_update_slice_in_dim(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), idx, axis=1
+        )
+        cp = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_pe"], k_pe[:, :, 0, :].astype(cache["k_pe"].dtype), idx, axis=1
+        )
+        new_cache = {"c_kv": cc, "k_pe": cp}
+        if s == 1:
+            out = _mla_decode_absorbed(params, q_nope, q_pe, cc, cp, idx, cfg)
+            return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt)), new_cache
+    else:
+        new_cache = None
+
+    # train / prefill: expand latent to per-head K/V, run chunked attention
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, params["wk_b"].astype(dt))
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, params["wv_b"].astype(dt))
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_pe, k_nope[..., :1].shape[:-1] + (cfg.qk_rope_dim,))], axis=-1)
+    q = jnp.concatenate([q_nope, q_pe], axis=-1)
+    # pad V up to qk dim so we can reuse the chunked kernel, then slice back
+    out = _chunked_attention(q, k, _pad_last(v, q.shape[-1]), causal=True, chunk=cfg.chunk)
+    out = out[..., : cfg.v_head_dim]
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt)), new_cache
+
+
+def _pad_last(x: jax.Array, to: int) -> jax.Array:
+    pad = to - x.shape[-1]
+    if pad <= 0:
+        return x
+    return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+
+
+def _mla_decode_absorbed(params, q_nope, q_pe, c_kv, k_pe, idx, cfg: MLAConfig) -> jax.Array:
+    """Absorbed MLA decode: scores directly against the latent cache."""
+    dt = q_nope.dtype
+    scale = 1.0 / math.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+    # fold W_uk into the query: (B,1,H,nope) x (rank,H,nope) -> (B,H,rank)
+    q_lat = jnp.einsum("bhk,rhk->bhr", q_nope[:, 0], params["wk_b"].astype(dt))
+    scores = jnp.einsum("bhr,bsr->bhs", q_lat, c_kv)
+    scores += jnp.einsum("bhk,bsk->bhs", q_pe[:, 0], k_pe)
+    scores = (scores * scale).astype(jnp.float32)
+    smax = c_kv.shape[1]
+    valid = jnp.arange(smax)[None, None, :] <= idx
+    scores = jnp.where(valid, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(dt)
+    o_lat = jnp.einsum("bhs,bsr->bhr", w, c_kv)
+    out = jnp.einsum("bhr,rhk->bhk", o_lat, params["wv_b"].astype(dt))  # absorb W_uv
+    return out[:, None]
+
+
+def mla_cache_shape(
+    batch: int, max_seq: int, kv_lora_rank: int, qk_rope_dim: int, dtype: Any = jnp.bfloat16
+) -> Dict[str, jax.ShapeDtypeStruct]:
+    return {
+        "c_kv": jax.ShapeDtypeStruct((batch, max_seq, kv_lora_rank), dtype),
+        "k_pe": jax.ShapeDtypeStruct((batch, max_seq, qk_rope_dim), dtype),
+    }

@@ -1,0 +1,240 @@
+"""Parameter descriptors and basic layers shared by all architectures.
+
+Single source of truth for parameters: each module contributes a tree of
+``ParamSpec`` descriptors; from that one tree we derive
+  * materialized params        (``init_params``)
+  * ShapeDtypeStruct stand-ins (``abstract_params`` — dry-run, no allocation)
+  * logical-axis trees         (``axes_tree`` — consumed by sharding rules)
+
+Logical axis names (resolved to mesh axes in ``repro.distributed.sharding``):
+  batch, seq, embed, vocab, heads, kv_heads, head_dim, mlp, experts,
+  layers, groups, state, qk_rank, kv_rank
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Parameter descriptors
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"  # normal | zeros | ones | embed
+    scale: float = 1.0
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x: Any) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _tree_map_specs(fn: Callable[[ParamSpec], Any], tree: Any) -> Any:
+    return jax.tree_util.tree_map(fn, tree, is_leaf=is_spec)
+
+
+def init_params(key: jax.Array, spec_tree: Any, dtype: Any = None) -> Any:
+    """Materialize a spec tree into real arrays (deterministic per-leaf keys)."""
+    leaves, treedef = jax.tree_util.tree_flatten(spec_tree, is_leaf=is_spec)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    out = []
+    for i, spec in enumerate(leaves):
+        dt = dtype or spec.dtype
+        if spec.init == "zeros":
+            arr = jnp.zeros(spec.shape, dt)
+        elif spec.init == "ones":
+            arr = jnp.ones(spec.shape, dt)
+        else:
+            std = spec.scale
+            if spec.init == "normal" and spec.scale == 1.0:
+                # fan-in scaled by default
+                fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+                std = 1.0 / math.sqrt(max(fan_in, 1))
+            elif spec.init == "embed":
+                std = 0.02
+            arr = (jax.random.normal(keys[i], spec.shape, jnp.float32) * std).astype(dt)
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def abstract_params(spec_tree: Any, dtype: Any = None) -> Any:
+    """ShapeDtypeStruct stand-ins — used by the multi-pod dry-run."""
+    return _tree_map_specs(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype or s.dtype), spec_tree
+    )
+
+
+def axes_tree(spec_tree: Any) -> Any:
+    return _tree_map_specs(lambda s: s.axes, spec_tree)
+
+
+def count_params(spec_tree: Any) -> int:
+    leaves, _ = jax.tree_util.tree_flatten(spec_tree, is_leaf=is_spec)
+    return sum(int(np.prod(s.shape)) for s in leaves)
+
+
+def stack_layer_specs(spec_tree: Any, n_layers: int, axis_name: str = "layers") -> Any:
+    """Add a leading scanned-layers dimension to every spec in the tree."""
+    return _tree_map_specs(
+        lambda s: ParamSpec(
+            shape=(n_layers,) + s.shape,
+            axes=(axis_name,) + s.axes,
+            init=s.init,
+            scale=s.scale,
+            dtype=s.dtype,
+        ),
+        spec_tree,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Normalization / activation / positional layers
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_spec(dim: int) -> Dict[str, ParamSpec]:
+    return {"scale": ParamSpec((dim,), ("embed",), init="ones")}
+
+
+def rms_norm(params: Dict[str, jax.Array], x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def head_rms_norm(scale: jax.Array, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """qk-norm (Qwen3): RMS over the head_dim axis of (..., heads, head_dim)."""
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(dt)
+
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """Rotate (..., S, H, D) by position; positions is (..., S)."""
+    dt = x.dtype
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)  # (d/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, d/2)
+    angles = angles[..., :, None, :]  # broadcast over heads
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dt)
+
+
+def swiglu(gate: jax.Array, up: jax.Array) -> jax.Array:
+    return jax.nn.silu(gate) * up
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding (vocab sharded; loss never replicates logits)
+# ---------------------------------------------------------------------------
+
+
+def embedding_spec(vocab: int, d_model: int) -> Dict[str, ParamSpec]:
+    return {"embedding": ParamSpec((vocab, d_model), ("vocab", "embed"), init="embed")}
+
+
+def embed_tokens(params: Dict[str, jax.Array], tokens: jax.Array, compute_dtype: Any) -> jax.Array:
+    emb = params["embedding"]
+    return emb.astype(compute_dtype)[tokens]
+
+
+def unembed_logits(params: Dict[str, jax.Array], x: jax.Array) -> jax.Array:
+    """(B, S, d) -> (B, S, V); vocab dimension stays sharded."""
+    emb = params["embedding"].astype(x.dtype)
+    return jnp.einsum("bsd,vd->bsv", x, emb)
+
+
+def cross_entropy_from_logits(
+    logits: jax.Array,
+    labels: jax.Array,
+    mask: Optional[jax.Array] = None,
+    valid_vocab: int = 0,
+    reduce: bool = True,
+) -> jax.Array:
+    """Mean CE over tokens, shard-local in the vocab dimension.
+
+    Everything is expressed as reductions over the (sharded) vocab axis —
+    max, logsumexp, and a one-hot contraction for the label logit (instead
+    of take_along_axis, whose gather would force GSPMD to all-gather the
+    full logits). Padded vocab entries are masked with an iota compare
+    (instead of a scatter). The only cross-shard traffic is (B, S)-sized
+    all-reduces over 'model'.
+    """
+    logits = logits.astype(jnp.float32)
+    viota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    if valid_vocab and valid_vocab < logits.shape[-1]:
+        logits = jnp.where(viota < valid_vocab, logits, -1e30)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    lse = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + jnp.squeeze(m, -1)
+    onehot = viota == labels[..., None]
+    ll = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    nll = lse - ll
+    if mask is not None:
+        nll = nll * mask
+    if not reduce:
+        return nll
+    if mask is not None:
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+
+def mlp_spec(d_model: int, d_ff: int) -> Dict[str, ParamSpec]:
+    return {
+        "gate": ParamSpec((d_model, d_ff), ("embed", "mlp")),
+        "up": ParamSpec((d_model, d_ff), ("embed", "mlp")),
+        "down": ParamSpec((d_ff, d_model), ("mlp", "embed")),
+    }
+
+
+def mlp_forward(params: Dict[str, jax.Array], x: jax.Array) -> jax.Array:
+    dt = x.dtype
+    g = jnp.einsum("bsd,df->bsf", x, params["gate"].astype(dt))
+    u = jnp.einsum("bsd,df->bsf", x, params["up"].astype(dt))
+    h = swiglu(g, u)
+    return jnp.einsum("bsf,fd->bsd", h, params["down"].astype(dt))
+
+
+# ---------------------------------------------------------------------------
+# Misc
+# ---------------------------------------------------------------------------
+
+
+def pad_vocab(vocab: int, multiple: int = 256) -> int:
+    """Pad embedding tables so the vocab axis shards evenly (Megatron-style)."""
+    return ((vocab + multiple - 1) // multiple) * multiple
+
+
+def causal_mask(s_q: int, s_k: int, offset: int = 0) -> jax.Array:
+    """Boolean (s_q, s_k) mask; query i attends to keys <= i + offset."""
+    q = jnp.arange(s_q)[:, None] + offset
+    k = jnp.arange(s_k)[None, :]
+    return k <= q

@@ -1,0 +1,166 @@
+"""Mixture-of-Experts FFN with top-k routing and capacity-based dispatch.
+
+Dispatch is sort-free scatter/gather (no (tokens, E, C) one-hot tensor):
+  1. router top-k -> (token, expert, weight) triples;
+  2. position-within-expert via cumulative counts;
+  3. scatter token activations into an (E, C, d) buffer (drop over capacity);
+  4. batched expert SwiGLU: einsum over the expert-major buffer (the expert
+     axis is sharded over the "model" mesh axis — expert parallelism; GSPMD
+     inserts the token all-to-all at the scatter/gather boundary);
+  5. gather back and combine with routing weights; over-capacity tokens fall
+     through via the residual connection.
+
+Supports top-1 + shared expert (Llama-4 Scout style) and 128-expert top-8
+(Qwen3-MoE style). FLOPs scale with *active* experts times the capacity
+factor, so the roofline's MODEL_FLOPS/HLO_FLOPs stays honest.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import ParamSpec, swiglu
+from repro.distributed.logical import constrain
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    d_expert: int  # per-expert FFN width
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    n_shared_experts: int = 0  # shared expert width = n_shared * d_expert
+    router_aux_weight: float = 0.01
+    normalize_router_weights: bool = True  # softmax over the selected top-k
+    # hierarchical dispatch: positions are computed within contiguous token
+    # blocks (= data shards on the production mesh), so every scatter into
+    # the (E, C, d) buffer writes a capacity strip aligned with the writing
+    # shard — dispatch crosses only the expert ("model") axis, the
+    # fundamental EP all-to-all. 16 = the production data axis.
+    dispatch_blocks: int = 16
+
+
+def moe_spec(cfg: MoEConfig) -> Dict[str, ParamSpec]:
+    spec = {
+        "router": ParamSpec((cfg.d_model, cfg.n_experts), ("embed", "experts")),
+        "w_gate": ParamSpec(
+            (cfg.n_experts, cfg.d_model, cfg.d_expert), ("experts", "embed", "mlp")
+        ),
+        "w_up": ParamSpec(
+            (cfg.n_experts, cfg.d_model, cfg.d_expert), ("experts", "embed", "mlp")
+        ),
+        "w_down": ParamSpec(
+            (cfg.n_experts, cfg.d_expert, cfg.d_model), ("experts", "mlp", "embed")
+        ),
+    }
+    if cfg.n_shared_experts > 0:
+        ds = cfg.n_shared_experts * cfg.d_expert
+        spec["shared_gate"] = ParamSpec((cfg.d_model, ds), ("embed", "mlp"))
+        spec["shared_up"] = ParamSpec((cfg.d_model, ds), ("embed", "mlp"))
+        spec["shared_down"] = ParamSpec((ds, cfg.d_model), ("mlp", "embed"))
+    return spec
+
+
+def capacity(n_tokens: int, cfg: MoEConfig) -> int:
+    c = int(cfg.capacity_factor * cfg.top_k * n_tokens / cfg.n_experts) + 1
+    # Deliberately NOT a multiple of the data-axis size: sharding the
+    # capacity axis makes GSPMD replicate the (N, d) per-assignment values
+    # (137 GB/layer measured) instead of reducing the buffer (10.7 GB).
+    # See EXPERIMENTS.md §Perf iterations A1-A3.
+    return max(8, -(-c // 8) * 8)
+
+
+def moe_forward(
+    params: Dict[str, jax.Array],
+    x: jax.Array,  # (B, S, d)
+    cfg: MoEConfig,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (out (B,S,d), aux_loss scalar)."""
+    dt = x.dtype
+    b, s, d = x.shape
+    nt = b * s
+    xf = x.reshape(nt, d)
+
+    logits = jnp.einsum("td,de->te", xf, params["router"].astype(dt)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, cfg.top_k)  # (nt, k)
+    if cfg.normalize_router_weights:
+        top_w = top_w / jnp.maximum(jnp.sum(top_w, -1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch): E * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.zeros((cfg.n_experts,), jnp.float32).at[top_e.reshape(-1)].add(
+        1.0 / (nt * cfg.top_k)
+    )
+    aux = cfg.router_aux_weight * cfg.n_experts * jnp.sum(me * ce)
+
+    # flatten (token, k) assignment triples
+    flat_e = top_e.reshape(-1)  # (nt*k,)
+    flat_w = top_w.reshape(-1).astype(dt)
+    flat_t = jnp.repeat(jnp.arange(nt), cfg.top_k)
+
+    cap = capacity(nt, cfg)
+    n = flat_e.shape[0]
+    blocks = cfg.dispatch_blocks if n % cfg.dispatch_blocks == 0 else 1
+    cap_block = max(8, -(-cap // blocks))
+    cap = cap_block * blocks
+    # hierarchical positions: each contiguous token block fills its own
+    # capacity strip [b*cap_block, (b+1)*cap_block) of every expert
+    pos = _position_in_expert_blocked(flat_e, cfg.n_experts, blocks)  # (n,)
+    keep = pos < cap_block
+    block_id = jnp.arange(n, dtype=jnp.int32) // (n // blocks)
+    pos_c = block_id * cap_block + jnp.minimum(pos, cap_block - 1)
+    # Dropped assignments scatter a ZERO into their strip's last slot
+    # (harmless: the gather-back is masked by ``keep``); scatter-ADD keeps
+    # duplicate hits at that slot from clobbering a valid one.
+    val = jnp.where(keep[:, None], xf[flat_t], jnp.zeros((1, d), dt))
+    buf = jnp.zeros((cfg.n_experts, cap, d), dt).at[flat_e, pos_c].add(val)
+    buf = constrain(buf, ("experts", None, None))
+
+    # expert computation (expert axis sharded over "model")
+    g = jnp.einsum("ecd,edf->ecf", buf, params["w_gate"].astype(dt))
+    u = jnp.einsum("ecd,edf->ecf", buf, params["w_up"].astype(dt))
+    h = swiglu(g, u)
+    eo = jnp.einsum("ecf,efd->ecd", h, params["w_down"].astype(dt))
+    eo = constrain(eo, ("experts", None, None))
+
+    # gather back & weighted combine (dropped tokens contribute zero)
+    per_assign = eo[flat_e, pos_c] * (flat_w * keep.astype(dt))[:, None]
+    out = jnp.zeros((nt, d), dt).at[flat_t].add(per_assign)
+
+    if cfg.n_shared_experts > 0:
+        sg = jnp.einsum("td,df->tf", xf, params["shared_gate"].astype(dt))
+        su = jnp.einsum("td,df->tf", xf, params["shared_up"].astype(dt))
+        out = out + jnp.einsum(
+            "tf,fd->td", swiglu(sg, su), params["shared_down"].astype(dt)
+        )
+    return out.reshape(b, s, d), aux
+
+
+def _position_in_expert_blocked(
+    flat_e: jax.Array, n_experts: int, blocks: int
+) -> jax.Array:
+    """Index of each assignment within its (block, expert) queue.
+
+    Sort-based per block: O(N log(N/B)) with no (N, E) intermediates; all
+    ops are batched over the block axis, which is data-sharded, so the whole
+    position computation is shard-local on the production mesh.
+    """
+    n = flat_e.shape[0]
+    nb = n // blocks
+    e2 = flat_e.reshape(blocks, nb)
+    order = jnp.argsort(e2, axis=1, stable=True)  # (B, nb)
+    sorted_e = jnp.take_along_axis(e2, order, axis=1)
+    counts = jnp.zeros((blocks, n_experts), jnp.int32)
+    counts = counts.at[jnp.arange(blocks)[:, None], e2].add(1)
+    starts = jnp.cumsum(counts, axis=1) - counts  # exclusive prefix per block
+    pos_sorted = jnp.arange(nb, dtype=jnp.int32)[None, :] - jnp.take_along_axis(
+        starts, sorted_e, axis=1
+    )
+    pos = jnp.zeros((blocks, nb), jnp.int32)
+    pos = pos.at[jnp.arange(blocks)[:, None], order].set(pos_sorted)
+    return pos.reshape(n)

@@ -1,0 +1,278 @@
+"""Mamba-2 (SSD, state-space duality) blocks — arXiv:2405.21060.
+
+The chunked SSD algorithm: within a chunk the recurrence is computed in its
+"dual" quadratic-attention form (matmul-friendly — MXU on TPU); across
+chunks a small scan carries the (H, P, N) state. The intra-chunk einsums are
+the compute hot spot and have a Pallas kernel (`repro.kernels.ssd_scan`);
+this module is the pure-jnp implementation used for CPU tests and the
+dry-run lowering.
+
+Decode keeps a per-layer recurrent state (B, H, P, N) + conv tail
+(B, d_conv-1, d_xBC) — O(1) in sequence length, which is what makes the
+``long_500k`` cells runnable for the SSM archs.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import ParamSpec, rms_norm
+from repro.distributed.logical import constrain
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    d_model: int
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    chunk: int = 256
+    norm_eps: float = 1e-6
+    dt_min: float = 0.001
+    dt_max: float = 0.1
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def d_xbc(self) -> int:
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+
+def mamba2_spec(cfg: SSMConfig) -> Dict[str, ParamSpec]:
+    d_in_proj = 2 * cfg.d_inner + 2 * cfg.n_groups * cfg.d_state + cfg.n_heads
+    return {
+        "in_proj": ParamSpec((cfg.d_model, d_in_proj), ("embed", "mlp")),
+        "conv_w": ParamSpec((cfg.d_conv, cfg.d_xbc), (None, "mlp")),
+        "conv_b": ParamSpec((cfg.d_xbc,), ("mlp",), init="zeros"),
+        "A_log": ParamSpec((cfg.n_heads,), ("heads",), init="zeros"),
+        "dt_bias": ParamSpec((cfg.n_heads,), ("heads",), init="zeros"),
+        "D": ParamSpec((cfg.n_heads,), ("heads",), init="ones"),
+        "norm": ParamSpec((cfg.d_inner,), ("mlp",), init="ones"),
+        "out_proj": ParamSpec((cfg.d_inner, cfg.d_model), ("mlp", "embed")),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Chunked SSD core
+# ---------------------------------------------------------------------------
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """L[i, j] = sum(a[j+1..i]) for i >= j, -inf above diagonal.
+
+    a: (..., Q) -> (..., Q, Q)."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.arange(q)[:, None] >= jnp.arange(q)[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,  # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H) — post-softplus
+    A: jax.Array,  # (H,) — negative
+    Bm: jax.Array,  # (B, S, G, N)
+    Cm: jax.Array,  # (B, S, G, N)
+    chunk: int,
+    initial_state: Optional[jax.Array] = None,  # (B, H, P, N)
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    b, s_orig, h, p = x.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    q = min(chunk, s_orig)
+    # pad to a chunk multiple: dt=0 on padding => decay 1 and zero state
+    # contribution, so padded steps are exact no-ops on the recurrence
+    pad = (-s_orig) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    s = s_orig + pad
+    nc = s // q
+    rep = h // g  # heads per group
+
+    # shard the independent chunk axis over "model": every (B,NC,Q,*) and
+    # (B,NC,H,Q,Q) intermediate below — the dominant HBM traffic of the
+    # SSD dual form — becomes 1/TP-sized per device; only the small
+    # inter-chunk state scan crosses chunk shards
+    xc = constrain(x.reshape(b, nc, q, h, p), ("batch", "chunks", None, None, None))
+    dtc = constrain(dt.reshape(b, nc, q, h), ("batch", "chunks", None, None))
+    Bc = constrain(Bm.reshape(b, nc, q, g, n), ("batch", "chunks", None, None, None))
+    Cc = constrain(Cm.reshape(b, nc, q, g, n), ("batch", "chunks", None, None, None))
+    a = dtc * A[None, None, None, :]  # (B,NC,Q,H)
+
+    a_hbcq = jnp.moveaxis(a, -1, 2)  # (B,NC,H,Q)
+    L = jnp.exp(_segsum(a_hbcq))  # (B,NC,H,Q,Q)
+    cum_a = jnp.cumsum(a_hbcq, axis=-1)  # (B,NC,H,Q)
+    total_a = cum_a[..., -1]  # (B,NC,H)
+
+    # intra-chunk (dual quadratic form)
+    cb = jnp.einsum("bcqgn,bcsgn->bcgqs", Cc, Bc)  # (B,NC,G,Q,Q)
+    cb = constrain(jnp.repeat(cb, rep, axis=2), ("batch", "chunks", None, None, None))
+    scores = cb * L * jnp.moveaxis(dtc, -1, 2)[..., None, :]  # dt_j on keys
+    y_intra = jnp.einsum("bchqs,bcshp->bcqhp", scores.astype(x.dtype), xc)
+
+    # chunk states: S_c = sum_j exp(total - cum_j) dt_j B_j (x) x_j
+    decay_state = jnp.exp(total_a[..., None] - cum_a)  # (B,NC,H,Q)
+    dtx = xc * (dtc * jnp.moveaxis(decay_state, 2, -1))[..., None]  # (B,NC,Q,H,P)
+    Bh = jnp.repeat(Bc, rep, axis=3)  # (B,NC,Q,H,N)  (G -> H)
+    chunk_states = constrain(
+        jnp.einsum("bcqhn,bcqhp->bchpn", Bh, dtx),
+        ("batch", "chunks", None, None, None),
+    )
+
+    # inter-chunk scan (kept in f32: the state is the numerically sensitive
+    # part of SSD; matches the reference implementation's fp32 states)
+    if initial_state is None:
+        initial_state = jnp.zeros((b, h, p, n), jnp.float32)
+    initial_state = initial_state.astype(jnp.float32)
+    decay_chunk = jnp.exp(total_a)  # (B,NC,H)
+
+    def step(carry, inp):
+        s_prev = carry
+        dc, cs = inp  # (B,H), (B,H,P,N)
+        s_new = s_prev * dc[..., None, None] + cs.astype(jnp.float32)
+        return s_new, s_prev
+
+    dc_t = jnp.moveaxis(decay_chunk, 1, 0)  # (NC,B,H)
+    cs_t = jnp.moveaxis(chunk_states, 1, 0)  # (NC,B,H,P,N)
+    final_state, prev_states = jax.lax.scan(step, initial_state, (dc_t, cs_t))
+    prev_states = constrain(
+        jnp.moveaxis(prev_states, 0, 1), ("batch", "chunks", None, None, None)
+    )  # (B,NC,H,P,N)
+
+    # inter-chunk contribution: C_i * exp(cum_i) * state_{c-1}
+    decay_in = jnp.exp(cum_a)  # (B,NC,H,Q)
+    Ch = jnp.repeat(Cc, rep, axis=3)  # (B,NC,Q,H,N)
+    y_inter = jnp.einsum("bcqhn,bchpn->bcqhp", Ch, prev_states.astype(x.dtype))
+    y_inter = y_inter * jnp.moveaxis(decay_in, 2, -1)[..., None]
+
+    y = constrain(y_intra + y_inter, ("batch", "chunks", None, None, None))
+    y = y.reshape(b, s, h, p).astype(x.dtype)
+    if pad:
+        y = y[:, :s_orig]
+    return y, final_state
+
+
+# ---------------------------------------------------------------------------
+# Full Mamba-2 block
+# ---------------------------------------------------------------------------
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, bias: jax.Array, tail: Optional[jax.Array]) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv1d. xbc: (B,S,C); w: (K,C). Returns (y, new_tail).
+
+    ``tail`` (the cache leaf) keeps its own storage dtype; compute happens in
+    the activation dtype.
+    """
+    k = w.shape[0]
+    tail_dtype = xbc.dtype if tail is None else tail.dtype
+    if tail is None:
+        tail_c = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        tail_c = tail.astype(xbc.dtype)
+    xp = jnp.concatenate([tail_c, xbc], axis=1)
+    new_tail = xp[:, -(k - 1) :, :] if k > 1 else tail_c[:, :0, :]
+    ys = sum(
+        xp[:, i : i + xbc.shape[1], :] * w[i][None, None, :] for i in range(k)
+    )
+    return jax.nn.silu(ys + bias[None, None, :]), new_tail.astype(tail_dtype)
+
+
+def mamba2_forward(
+    params: Dict[str, jax.Array],
+    x: jax.Array,  # (B, S, d_model)
+    cfg: SSMConfig,
+    state: Optional[Dict[str, jax.Array]] = None,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Sequence-mode forward. ``state`` carries {ssm (B,H,P,N), conv (B,K-1,C)}
+    for chunked prefill / streaming; None for plain training."""
+    dt_ = x.dtype
+    b, s, _ = x.shape
+    h, p, n, g = cfg.n_heads, cfg.head_dim, cfg.d_state, cfg.n_groups
+
+    zxbcdt = constrain(
+        jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(dt_)),
+        ("batch", None, "mlp"),
+    )
+    z, xbc, dt_raw = jnp.split(
+        zxbcdt, [cfg.d_inner, cfg.d_inner + cfg.d_xbc], axis=-1
+    )
+    conv_tail = state["conv"] if state is not None else None
+    xbc, new_tail = _causal_conv(xbc, params["conv_w"].astype(dt_), params["conv_b"].astype(dt_), conv_tail)
+    xs, Bm, Cm = jnp.split(xbc, [cfg.d_inner, cfg.d_inner + g * n], axis=-1)
+    xs = xs.reshape(b, s, h, p)
+    Bm = Bm.reshape(b, s, g, n)
+    Cm = Cm.reshape(b, s, g, n)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    dt = jnp.clip(dt, cfg.dt_min, cfg.dt_max).astype(jnp.float32)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+
+    init = state["ssm"] if state is not None else None
+    y, final_state = ssd_chunked(xs, dt, A, Bm, Cm, cfg.chunk, init)
+    y = y + xs * params["D"].astype(dt_)[None, None, :, None]
+    y = y.reshape(b, s, cfg.d_inner)
+    y = rms_norm({"scale": params["norm"]}, y, cfg.norm_eps) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(dt_))
+    new_state = {"ssm": final_state, "conv": new_tail} if state is not None else None
+    return out, new_state
+
+
+def mamba2_decode_step(
+    params: Dict[str, jax.Array],
+    x: jax.Array,  # (B, 1, d_model)
+    cfg: SSMConfig,
+    state: Dict[str, jax.Array],
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """O(1) recurrent decode: s' = exp(dt A) s + dt B (x) x; y = C s + D x."""
+    dt_ = x.dtype
+    b = x.shape[0]
+    h, p, n, g = cfg.n_heads, cfg.head_dim, cfg.d_state, cfg.n_groups
+    rep = h // g
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(dt_))
+    z, xbc, dt_raw = jnp.split(zxbcdt, [cfg.d_inner, cfg.d_inner + cfg.d_xbc], axis=-1)
+    xbc, new_tail = _causal_conv(
+        xbc, params["conv_w"].astype(dt_), params["conv_b"].astype(dt_), state["conv"]
+    )
+    xs, Bm, Cm = jnp.split(xbc, [cfg.d_inner, cfg.d_inner + g * n], axis=-1)
+    xs = xs.reshape(b, h, p)
+    Bm = jnp.repeat(Bm.reshape(b, g, n), rep, axis=1)  # (B,H,N)
+    Cm = jnp.repeat(Cm.reshape(b, g, n), rep, axis=1)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    dt = jnp.clip(dt, cfg.dt_min, cfg.dt_max)  # (B,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * A[None, :])  # (B,H)
+
+    s_prev = state["ssm"].astype(jnp.float32)
+    upd = (dt[..., None] * xs.astype(jnp.float32))[..., :, None] * Bm.astype(jnp.float32)[:, :, None, :]
+    s_new = s_prev * decay[..., None, None] + upd  # (B,H,P,N)
+    y = jnp.einsum("bhn,bhpn->bhp", Cm.astype(jnp.float32), s_new)
+    y = y.astype(dt_) + xs * params["D"].astype(dt_)[None, :, None]
+    y = y.reshape(b, 1, cfg.d_inner)
+    y = rms_norm({"scale": params["norm"]}, y, cfg.norm_eps) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(dt_))
+    return out, {"ssm": s_new.astype(state["ssm"].dtype), "conv": new_tail}
+
+
+def mamba2_state_shape(
+    batch: int, cfg: SSMConfig, dtype: Any = jnp.float32
+) -> Dict[str, jax.ShapeDtypeStruct]:
+    return {
+        "ssm": jax.ShapeDtypeStruct((batch, cfg.n_heads, cfg.head_dim, cfg.d_state), dtype),
+        "conv": jax.ShapeDtypeStruct((batch, cfg.d_conv - 1, cfg.d_xbc), dtype),
+    }

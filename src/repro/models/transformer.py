@@ -1,0 +1,527 @@
+"""Unified decoder/encoder stacks for all assigned architectures.
+
+Every stack is **scanned over layers** (jax.lax.scan with stacked per-layer
+parameters) so HLO size and compile time are O(1) in depth — required to
+dry-run the 94-layer MoE and 64-layer 104B configs on this build machine.
+
+Families:
+  dense / vlm / audio : [rmsnorm -> attention -> +res -> rmsnorm -> SwiGLU MLP -> +res] xL
+  moe                 : same with MoE FFN (+ optional shared expert)
+  ssm                 : [rmsnorm -> mamba2 -> +res] xL
+  hybrid (zamba2)     : groups of mamba layers with ONE weight-tied
+                        attention+MLP block applied after each group
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (
+    AttnConfig,
+    MLAConfig,
+    gqa_cache_shape,
+    gqa_forward,
+    gqa_spec,
+    mla_cache_shape,
+    mla_forward,
+    mla_spec,
+)
+from .config import ModelConfig
+from repro.distributed.logical import constrain
+from .layers import (
+    ParamSpec,
+    cross_entropy_from_logits,
+    embed_tokens,
+    embedding_spec,
+    mlp_forward,
+    mlp_spec,
+    rms_norm,
+    rmsnorm_spec,
+    stack_layer_specs,
+    unembed_logits,
+)
+from .moe import MoEConfig, moe_forward, moe_spec
+from .ssm import (
+    SSMConfig,
+    mamba2_decode_step,
+    mamba2_forward,
+    mamba2_spec,
+    mamba2_state_shape,
+)
+
+# ---------------------------------------------------------------------------
+# Config adapters
+# ---------------------------------------------------------------------------
+
+
+def attn_config(cfg: ModelConfig) -> AttnConfig:
+    return AttnConfig(
+        n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads or cfg.n_heads,
+        head_dim=cfg.resolved_head_dim,
+        rope_theta=cfg.rope_theta,
+        qk_norm=cfg.qk_norm,
+        causal=cfg.causal,
+        norm_eps=cfg.norm_eps,
+        chunk=cfg.attn_chunk,
+    )
+
+
+def mla_config(cfg: ModelConfig) -> MLAConfig:
+    return MLAConfig(
+        n_heads=cfg.n_heads,
+        q_lora_rank=cfg.q_lora_rank,
+        kv_lora_rank=cfg.kv_lora_rank,
+        qk_nope_dim=cfg.qk_nope_dim,
+        qk_rope_dim=cfg.qk_rope_dim,
+        v_head_dim=cfg.v_head_dim,
+        rope_theta=cfg.rope_theta,
+        norm_eps=cfg.norm_eps,
+        chunk=cfg.attn_chunk,
+    )
+
+
+def moe_config(cfg: ModelConfig) -> MoEConfig:
+    return MoEConfig(
+        d_model=cfg.d_model,
+        d_expert=cfg.d_expert or cfg.d_ff,
+        n_experts=cfg.n_experts,
+        top_k=cfg.top_k,
+        capacity_factor=cfg.capacity_factor,
+        n_shared_experts=cfg.n_shared_experts,
+    )
+
+
+def ssm_config(cfg: ModelConfig) -> SSMConfig:
+    return SSMConfig(
+        d_model=cfg.d_model,
+        d_state=cfg.ssm_state,
+        d_conv=cfg.ssm_conv,
+        expand=cfg.ssm_expand,
+        head_dim=cfg.ssm_head_dim,
+        n_groups=cfg.ssm_groups,
+        chunk=cfg.ssm_chunk,
+        norm_eps=cfg.norm_eps,
+    )
+
+
+def hybrid_layout(cfg: ModelConfig) -> Tuple[int, int, int]:
+    """(n_groups, layers_per_group, tail_layers) for hybrid stacks."""
+    period = cfg.shared_attn_period
+    n_groups = cfg.n_layers // period
+    tail = cfg.n_layers - n_groups * period
+    return n_groups, period, tail
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+
+def _attn_spec(cfg: ModelConfig) -> Dict[str, Any]:
+    if cfg.attention == "mla":
+        return mla_spec(
+            cfg.d_model,
+            cfg.n_heads,
+            cfg.q_lora_rank,
+            cfg.kv_lora_rank,
+            cfg.qk_nope_dim,
+            cfg.qk_rope_dim,
+            cfg.v_head_dim,
+        )
+    return gqa_spec(
+        cfg.d_model,
+        cfg.n_heads,
+        cfg.n_kv_heads or cfg.n_heads,
+        cfg.resolved_head_dim,
+        qk_norm=cfg.qk_norm,
+    )
+
+
+def _dense_block_spec(cfg: ModelConfig) -> Dict[str, Any]:
+    spec: Dict[str, Any] = {
+        "attn_norm": rmsnorm_spec(cfg.d_model),
+        "attn": _attn_spec(cfg),
+        "mlp_norm": rmsnorm_spec(cfg.d_model),
+    }
+    if cfg.family == "moe":
+        spec["moe"] = moe_spec(moe_config(cfg))
+    else:
+        spec["mlp"] = mlp_spec(cfg.d_model, cfg.d_ff)
+    return spec
+
+
+def _mamba_block_spec(cfg: ModelConfig) -> Dict[str, Any]:
+    return {"norm": rmsnorm_spec(cfg.d_model), "mamba": mamba2_spec(ssm_config(cfg))}
+
+
+def model_spec(cfg: ModelConfig) -> Dict[str, Any]:
+    spec: Dict[str, Any] = {}
+    if cfg.vocab:
+        spec["embed"] = embedding_spec(cfg.padded_vocab, cfg.d_model)
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        spec["layers"] = stack_layer_specs(_dense_block_spec(cfg), cfg.n_layers)
+    elif cfg.family == "ssm":
+        spec["layers"] = stack_layer_specs(_mamba_block_spec(cfg), cfg.n_layers)
+    elif cfg.family == "hybrid":
+        ng, per, tail = hybrid_layout(cfg)
+        spec["groups"] = stack_layer_specs(
+            stack_layer_specs(_mamba_block_spec(cfg), per), ng, axis_name="groups"
+        )
+        if tail:
+            spec["tail"] = stack_layer_specs(_mamba_block_spec(cfg), tail)
+        # the weight-tied shared transformer block (Zamba2)
+        spec["shared_attn"] = {
+            "attn_norm": rmsnorm_spec(cfg.d_model),
+            "attn": gqa_spec(
+                cfg.d_model, cfg.n_heads, cfg.n_kv_heads or cfg.n_heads, cfg.resolved_head_dim
+            ),
+            "mlp_norm": rmsnorm_spec(cfg.d_model),
+            "mlp": mlp_spec(cfg.d_model, cfg.d_ff),
+        }
+    else:
+        raise ValueError(f"unknown family {cfg.family}")
+    spec["final_norm"] = rmsnorm_spec(cfg.d_model)
+    return spec
+
+
+def _remat_policy(cfg: ModelConfig):
+    return {
+        "nothing": jax.checkpoint_policies.nothing_saveable,
+        "dots_nb": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+        "dots": jax.checkpoint_policies.dots_saveable,
+    }[cfg.remat_policy]
+
+
+# ---------------------------------------------------------------------------
+# Block forwards
+# ---------------------------------------------------------------------------
+
+
+def _dense_block(
+    lp: Dict[str, Any],
+    x: jax.Array,
+    cfg: ModelConfig,
+    positions: Optional[jax.Array],
+    cache: Optional[Dict[str, jax.Array]],
+    cache_index: Optional[jax.Array],
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]], jax.Array]:
+    x = constrain(x, ("batch", "seq", None))
+    h = rms_norm(lp["attn_norm"], x, cfg.norm_eps)
+    if cfg.attention == "mla":
+        a, new_cache = mla_forward(lp["attn"], h, mla_config(cfg), positions, cache, cache_index)
+    else:
+        a, new_cache = gqa_forward(lp["attn"], h, attn_config(cfg), positions, cache, cache_index)
+    x = x + constrain(a, ("batch", "seq", None))
+    h = rms_norm(lp["mlp_norm"], x, cfg.norm_eps)
+    if cfg.family == "moe":
+        m, aux = moe_forward(lp["moe"], h, moe_config(cfg))
+    else:
+        m, aux = mlp_forward(lp["mlp"], h), jnp.zeros((), jnp.float32)
+    return x + constrain(m, ("batch", "seq", None)), new_cache, aux
+
+
+def _mamba_block(
+    lp: Dict[str, Any],
+    x: jax.Array,
+    cfg: ModelConfig,
+    state: Optional[Dict[str, jax.Array]],
+    decode: bool,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    x = constrain(x, ("batch", "seq", None))
+    h = rms_norm(lp["norm"], x, cfg.norm_eps)
+    if decode:
+        m, new_state = mamba2_decode_step(lp["mamba"], h, ssm_config(cfg), state)
+    else:
+        m, new_state = mamba2_forward(lp["mamba"], h, ssm_config(cfg), state)
+    return x + constrain(m, ("batch", "seq", None)), new_state
+
+
+# ---------------------------------------------------------------------------
+# Stacks (scan over layers)
+# ---------------------------------------------------------------------------
+
+
+def _scan_dense(
+    layers: Dict[str, Any],
+    x: jax.Array,
+    cfg: ModelConfig,
+    positions: Optional[jax.Array],
+    cache: Optional[Dict[str, jax.Array]],
+    cache_index: Optional[jax.Array],
+    train: bool,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]], jax.Array]:
+    def body(carry, xs):
+        h, aux = carry
+        lp, lcache = xs
+        h2, new_cache, a = _dense_block(lp, h, cfg, positions, lcache, cache_index)
+        return (h2, aux + a), new_cache
+
+    fn = body
+    if cfg.remat and train:
+        fn = jax.checkpoint(body, policy=_remat_policy(cfg))
+    (x, aux), new_cache = jax.lax.scan(fn, (x, jnp.zeros((), jnp.float32)), (layers, cache))
+    return x, new_cache, aux
+
+
+def _scan_mamba(
+    layers: Dict[str, Any],
+    x: jax.Array,
+    cfg: ModelConfig,
+    state: Optional[Dict[str, jax.Array]],
+    decode: bool,
+    train: bool,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    def body(h, xs):
+        lp, lstate = xs
+        h2, new_state = _mamba_block(lp, h, cfg, lstate, decode)
+        return h2, new_state
+
+    fn = body
+    if cfg.remat and train:
+        fn = jax.checkpoint(body, policy=_remat_policy(cfg))
+    x, new_state = jax.lax.scan(fn, x, (layers, state))
+    return x, new_state
+
+
+def _hybrid_forward(
+    params: Dict[str, Any],
+    x: jax.Array,
+    cfg: ModelConfig,
+    positions: Optional[jax.Array],
+    cache: Optional[Dict[str, Any]],
+    cache_index: Optional[jax.Array],
+    decode: bool,
+    train: bool,
+) -> Tuple[jax.Array, Optional[Dict[str, Any]]]:
+    shared = params["shared_attn"]
+    acfg = attn_config(cfg)
+
+    def shared_block(h, attn_cache):
+        a_in = rms_norm(shared["attn_norm"], h, cfg.norm_eps)
+        a, new_attn_cache = gqa_forward(shared["attn"], a_in, acfg, positions, attn_cache, cache_index)
+        h = h + a
+        m_in = rms_norm(shared["mlp_norm"], h, cfg.norm_eps)
+        return h + mlp_forward(shared["mlp"], m_in), new_attn_cache
+
+    def group_body(h, xs):
+        gp, gstate, gattn = xs
+        h, new_state = _scan_mamba(gp, h, cfg, gstate, decode, train=False)
+        h, new_attn = shared_block(h, gattn)
+        return h, (new_state, new_attn)
+
+    fn = group_body
+    if cfg.remat and train:
+        fn = jax.checkpoint(group_body, policy=_remat_policy(cfg))
+    gstate = cache["groups_mamba"] if cache is not None else None
+    gattn = cache["groups_attn"] if cache is not None else None
+    x, (new_gstate, new_gattn) = jax.lax.scan(fn, x, (params["groups"], gstate, gattn))
+
+    new_cache = None
+    new_tail = None
+    if "tail" in params:
+        tstate = cache["tail"] if cache is not None else None
+        x, new_tail = _scan_mamba(params["tail"], x, cfg, tstate, decode, train)
+    if cache is not None:
+        new_cache = {"groups_mamba": new_gstate, "groups_attn": new_gattn}
+        if "tail" in params:
+            new_cache["tail"] = new_tail
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Model entry points
+# ---------------------------------------------------------------------------
+
+
+def forward(
+    params: Dict[str, Any],
+    cfg: ModelConfig,
+    tokens: Optional[jax.Array] = None,
+    embeds: Optional[jax.Array] = None,
+    cache: Optional[Dict[str, Any]] = None,
+    cache_index: Optional[jax.Array] = None,
+    train: bool = False,
+    return_hidden: bool = False,
+) -> Tuple[jax.Array, Optional[Dict[str, Any]], jax.Array]:
+    """Returns (logits (B,S,V_padded) or hidden, new_cache, aux_loss)."""
+    if embeds is not None:
+        x = embeds.astype(cfg.dtype)
+    else:
+        assert tokens is not None
+        x = embed_tokens(params["embed"], tokens, cfg.dtype)
+    x = constrain(x, ("batch", "seq", None))
+    b, s = x.shape[:2]
+    base = cache_index if cache_index is not None else 0
+    positions = jnp.broadcast_to(base + jnp.arange(s)[None, :], (b, s))
+    aux = jnp.zeros((), jnp.float32)
+    decode = cache is not None and s == 1
+
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        lcache = cache["layers"] if cache is not None else None
+        x, new_lcache, aux = _scan_dense(
+            params["layers"], x, cfg, positions, lcache, cache_index, train
+        )
+        new_cache = {"layers": new_lcache} if cache is not None else None
+    elif cfg.family == "ssm":
+        lstate = cache["layers"] if cache is not None else None
+        x, new_lstate = _scan_mamba(params["layers"], x, cfg, lstate, decode, train)
+        new_cache = {"layers": new_lstate} if cache is not None else None
+    elif cfg.family == "hybrid":
+        x, new_cache = _hybrid_forward(
+            params, x, cfg, positions, cache, cache_index, decode, train
+        )
+    else:
+        raise ValueError(cfg.family)
+
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    x = constrain(x, ("batch", "seq", None))
+    if return_hidden:
+        return x, new_cache, aux
+    logits = constrain(unembed_logits(params["embed"], x), ("batch", "seq", "vocab"))
+    return logits, new_cache, aux
+
+
+def train_loss(
+    params: Dict[str, Any],
+    cfg: ModelConfig,
+    batch: Dict[str, jax.Array],
+    ce_chunk: int = 512,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Next-token (or frame-classification) CE loss + aux.
+
+    The loss is computed in **sequence chunks with rematerialization**: full
+    (B, S, V) logits are never alive — per chunk, unembed + CE run forward
+    and are recomputed in backward. For the 150k-256k-vocab archs this is
+    the difference between ~4 GB and ~0.5 GB of logits-shaped f32 buffers
+    per device (several copies each).
+    """
+    tokens = batch.get("tokens")
+    embeds = batch.get("embeds")
+    labels = batch["labels"]
+    mask = batch.get("mask")
+    hidden, _, aux = forward(
+        params, cfg, tokens=tokens, embeds=embeds, train=True, return_hidden=True
+    )
+    b, s, d = hidden.shape
+    ce_chunk = cfg.ce_chunk or ce_chunk
+    ones = jnp.ones((b, s), jnp.float32) if mask is None else mask.astype(jnp.float32)
+
+    @jax.checkpoint
+    def chunk_sums(x_c, labels_c, mask_c):
+        logits_c = constrain(
+            unembed_logits(params["embed"], x_c), ("batch", None, "vocab")
+        )
+        nll = cross_entropy_from_logits(
+            logits_c, labels_c, mask_c, valid_vocab=cfg.vocab, reduce=False
+        )
+        return jnp.sum(nll), jnp.sum(mask_c)
+
+    if s > 2 * ce_chunk and s % ce_chunk == 0:
+        nc = s // ce_chunk
+        hc = jnp.moveaxis(hidden.reshape(b, nc, ce_chunk, d), 1, 0)
+        lc = jnp.moveaxis(labels.reshape(b, nc, ce_chunk), 1, 0)
+        mc = jnp.moveaxis(ones.reshape(b, nc, ce_chunk), 1, 0)
+
+        def body(acc, xs):
+            x_c, l_c, m_c = xs
+            sn, sm = chunk_sums(x_c, l_c, m_c)
+            return (acc[0] + sn, acc[1] + sm), None
+
+        (tot_nll, tot_mask), _ = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), (hc, lc, mc)
+        )
+        ce = tot_nll / jnp.maximum(tot_mask, 1.0)
+    else:
+        sn, sm = chunk_sums(hidden, labels, ones)
+        ce = sn / jnp.maximum(sm, 1.0)
+    loss = ce + aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Cache construction (abstract + concrete)
+# ---------------------------------------------------------------------------
+
+
+def cache_spec(cfg: ModelConfig, batch: int, max_seq: int) -> Dict[str, Any]:
+    """ShapeDtypeStruct tree for the decode cache (dry-run friendly)."""
+    dt = cfg.dtype
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        if cfg.attention == "mla":
+            per = mla_cache_shape(batch, max_seq, cfg.kv_lora_rank, cfg.qk_rope_dim, dt)
+        else:
+            per = gqa_cache_shape(
+                batch, max_seq, cfg.n_kv_heads or cfg.n_heads, cfg.resolved_head_dim, dt
+            )
+        return {"layers": _stack_sds(per, cfg.n_layers)}
+    if cfg.family == "ssm":
+        per = mamba2_state_shape(batch, ssm_config(cfg), jnp.float32)
+        return {"layers": _stack_sds(per, cfg.n_layers)}
+    if cfg.family == "hybrid":
+        ng, per_g, tail = hybrid_layout(cfg)
+        mstate = mamba2_state_shape(batch, ssm_config(cfg), jnp.float32)
+        attn = gqa_cache_shape(
+            batch, max_seq, cfg.n_kv_heads or cfg.n_heads, cfg.resolved_head_dim, dt
+        )
+        out = {
+            "groups_mamba": _stack_sds(_stack_sds(mstate, per_g), ng),
+            "groups_attn": _stack_sds(attn, ng),
+        }
+        if tail:
+            out["tail"] = _stack_sds(mstate, tail)
+        return out
+    raise ValueError(cfg.family)
+
+
+def _stack_sds(tree: Any, n: int) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), tree
+    )
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Dict[str, Any]:
+    return jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype), cache_spec(cfg, batch, max_seq)
+    )
+
+
+def cache_axes(cfg: ModelConfig) -> Dict[str, Any]:
+    """Logical axes for every cache leaf, built by construction (mirrors
+    cache_spec): batch -> "batch" (data-sharded), the long KV sequence axis
+    -> "kv_seq" (model-sharded, ring-attention style), SSM state unsharded
+    except batch."""
+    attn_ax = {
+        "k": ("layers", "batch", "kv_seq", None, None),
+        "v": ("layers", "batch", "kv_seq", None, None),
+    }
+    mla_ax = {
+        "c_kv": ("layers", "batch", "kv_seq", None),
+        "k_pe": ("layers", "batch", "kv_seq", None),
+    }
+    ssm_ax = {
+        "ssm": ("layers", "batch", None, None, None),
+        "conv": ("layers", "batch", None, None),
+    }
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        return {"layers": mla_ax if cfg.attention == "mla" else attn_ax}
+    if cfg.family == "ssm":
+        return {"layers": ssm_ax}
+    if cfg.family == "hybrid":
+        _, _, tail = hybrid_layout(cfg)
+        g_ssm = {
+            "ssm": ("groups", "layers", "batch", None, None, None),
+            "conv": ("groups", "layers", "batch", None, None),
+        }
+        g_attn = {
+            "k": ("groups", "batch", "kv_seq", None, None),
+            "v": ("groups", "batch", "kv_seq", None, None),
+        }
+        out = {"groups_mamba": g_ssm, "groups_attn": g_attn}
+        if tail:
+            out["tail"] = ssm_ax
+        return out
+    raise ValueError(cfg.family)

@@ -1,0 +1,22 @@
+from .adamw import AdamWConfig, AdamWState, apply_updates, global_norm, init_state, lr_at
+from .compression import (
+    compress_tree,
+    compressed_bytes,
+    decompress_tree,
+    ef_quantize_tree,
+    init_residual,
+)
+
+__all__ = [
+    "AdamWConfig",
+    "AdamWState",
+    "apply_updates",
+    "compress_tree",
+    "compressed_bytes",
+    "decompress_tree",
+    "ef_quantize_tree",
+    "global_norm",
+    "init_residual",
+    "init_state",
+    "lr_at",
+]

@@ -1,0 +1,109 @@
+"""AdamW with decoupled weight decay, global-norm clipping, LR schedules.
+
+Built here (no optax dependency per the scope rule). The optimizer state is
+a pytree shaped like the params (sharded identically by the step builder),
+plus a scalar count.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    count: jax.Array  # ()
+    mu: Any  # first moments (pytree like params)
+    nu: Any  # second moments
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"  # cosine | wsd | constant
+    final_lr_fraction: float = 0.1
+
+
+def lr_at(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (s + 1.0) / max(cfg.warmup_steps, 1))
+    if cfg.schedule == "constant":
+        decay = 1.0
+    elif cfg.schedule == "wsd":  # warmup-stable-decay: linear tail 20%
+        tail = 0.2 * cfg.total_steps
+        into_tail = jnp.maximum(0.0, s - (cfg.total_steps - tail))
+        decay = 1.0 - (1.0 - cfg.final_lr_fraction) * jnp.minimum(1.0, into_tail / tail)
+    else:  # cosine
+        frac = jnp.clip(s / max(cfg.total_steps, 1), 0.0, 1.0)
+        decay = cfg.final_lr_fraction + (1.0 - cfg.final_lr_fraction) * 0.5 * (
+            1.0 + jnp.cos(math.pi * frac)
+        )
+    return cfg.lr * warm * decay
+
+
+def init_state(params: Any) -> AdamWState:
+    # mu and nu must be DISTINCT buffers (both are donated by the train step)
+    mu = jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    nu = jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return AdamWState(count=jnp.zeros((), jnp.int32), mu=mu, nu=nu)
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> Tuple[Any, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm
+
+
+def apply_updates(
+    cfg: AdamWConfig,
+    params: Any,
+    grads: Any,
+    state: AdamWState,
+) -> Tuple[Any, AdamWState, Dict[str, jax.Array]]:
+    grads = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+    if cfg.clip_norm > 0:
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    else:
+        gnorm = global_norm(grads)
+    count = state.count + 1
+    lr = lr_at(cfg, count)
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        m2 = cfg.b1 * m + (1.0 - cfg.b1) * g
+        v2 = cfg.b2 * v + (1.0 - cfg.b2) * jnp.square(g)
+        mhat = m2 / b1c
+        vhat = v2 / b2c
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        decay = cfg.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * (step + decay)
+        return newp.astype(p.dtype), m2, v2
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    outs = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in outs])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, AdamWState(count=count, mu=new_m, nu=new_v), metrics

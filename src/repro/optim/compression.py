@@ -1,0 +1,88 @@
+"""Int8 error-feedback gradient compression for cross-pod traffic.
+
+Distributed-optimization trick for the "pod" (DCN) axis: gradients are
+block-scale int8-quantized before the cross-pod reduction (4x fewer DCN
+bytes); the quantization residual is carried to the next step (error
+feedback, Seide et al. 2014-style), which restores convergence to near-
+uncompressed quality.
+
+Two code paths:
+  * ``compress_tree`` / ``decompress_tree`` — explicit wire format (the grid
+    runtime ships these payloads between hosts; BOINC's "upload compression"
+    §2.2 adapted to tensors);
+  * ``ef_quantize_tree`` — in-graph round-trip + residual update, used
+    inside the jitted train step before the 'pod' psum.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.int8_quant.ops import int8_dequantize, int8_quantize
+
+
+def ef_quantize_tree(
+    grads: Any, residual: Any, interpret: bool = True
+) -> Tuple[Any, Any]:
+    """Quantize (grads + residual) to int8 resolution in-graph; returns
+    (quantized_grads, new_residual). Shapes/dtypes preserved."""
+
+    def one(g, r):
+        g32 = g.astype(jnp.float32) + r
+        # block-scale emulated inline (the Pallas kernel is the TPU path;
+        # inline keeps this differentiable-free math fusable in the step)
+        amax = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12)
+        scale = amax / 127.0
+        q = jnp.clip(jnp.round(g32 / scale), -127, 127)
+        deq = q * scale
+        return deq.astype(g.dtype), (g32 - deq)
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_r = treedef.flatten_up_to(residual)
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    qs = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+    rs = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+    return qs, rs
+
+
+def init_residual(params: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params
+    )
+
+
+# ---------------------------------------------------------------------------
+# Wire format (host-to-coordinator payloads in the grid runtime)
+# ---------------------------------------------------------------------------
+
+
+def compress_tree(tree: Any, interpret: bool = True) -> Dict[str, Any]:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    payload = []
+    for leaf in leaves:
+        q, s = int8_quantize(jnp.asarray(leaf), interpret=interpret)
+        payload.append(
+            {"q": q, "s": s, "n": leaf.size, "shape": tuple(leaf.shape), "dtype": str(leaf.dtype)}
+        )
+    return {"treedef": treedef, "payload": payload}
+
+
+def decompress_tree(packed: Dict[str, Any], interpret: bool = True) -> Any:
+    leaves = []
+    for item in packed["payload"]:
+        x = int8_dequantize(
+            item["q"],
+            item["s"],
+            n=item["n"],
+            shape=item["shape"],
+            out_dtype=jnp.dtype(item["dtype"]),
+            interpret=interpret,
+        )
+        leaves.append(x)
+    return jax.tree_util.tree_unflatten(packed["treedef"], leaves)
+
+
+def compressed_bytes(packed: Dict[str, Any]) -> int:
+    return sum(i["q"].size + i["s"].size * 4 for i in packed["payload"])

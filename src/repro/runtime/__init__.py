@@ -1,0 +1,34 @@
+from .grid_runtime import GridTrainer, GridTrainResult, grad_comparator
+from .serve_loop import BatchServer, Request, ServeMetrics
+from .step_builder import (
+    StepBundle,
+    build_step,
+    input_specs,
+    make_decode_step,
+    make_encoder_step,
+    make_grad_step,
+    make_prefill_step,
+    make_train_step,
+    model_flops_for_cell,
+)
+from .train_loop import TrainResult, train
+
+__all__ = [
+    "BatchServer",
+    "GridTrainResult",
+    "GridTrainer",
+    "Request",
+    "ServeMetrics",
+    "StepBundle",
+    "TrainResult",
+    "build_step",
+    "grad_comparator",
+    "input_specs",
+    "make_decode_step",
+    "make_encoder_step",
+    "make_grad_step",
+    "make_prefill_step",
+    "make_train_step",
+    "model_flops_for_cell",
+    "train",
+]

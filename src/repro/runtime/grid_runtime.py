@@ -1,0 +1,289 @@
+"""The volunteer-grid training runtime: BOINC middleware x JAX training.
+
+This is the paper's technique as a first-class training feature. A training
+run is a BOINC *project*; one microbatch gradient computation is a *job*;
+the emulated hosts execute jobs with real JAX compute while the virtual-time
+simulator (§9) drives dispatch, deadlines, validation, credit, and churn.
+
+  * jobs:        ("grad", step, shard) with est_flop_count = 6·N·tokens
+  * app:         adaptive replication + fuzzy gradient comparator built on
+                 the quorum_compare kernel (§3.4 adapted to bf16 tensors)
+  * assimilator: accumulates canonical gradients; when a step's shards are
+                 all assimilated, applies the AdamW update and submits the
+                 next step's jobs (the linear-bounded allocator arbitrates
+                 if multiple experiments share the grid)
+  * faults:      malicious/erroneous hosts corrupt outputs (SDC model);
+                 churned hosts trigger deadline re-dispatch (§4)
+  * credit:      PFC accounting doubles as the FLOPs ledger
+
+Replicated instances of a job receive byte-identical data (the pipeline is
+deterministic in (shard, step)), so gradient quorum comparison is sound —
+the tensor-scale analogue of homogeneous redundancy.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    App,
+    AppVersion,
+    GridSimulation,
+    Job,
+    Platform,
+    ProjectServer,
+    default_cpu_plan_class,
+    make_population,
+    next_id,
+)
+from repro.core.simulator import HostSpec
+from repro.data.pipeline import DataConfig, make_batch
+from repro.models.config import ModelConfig
+from repro.models.layers import init_params
+from repro.models.transformer import model_spec
+from repro.optim.adamw import AdamWConfig, apply_updates, init_state
+from repro.runtime.step_builder import make_grad_step
+
+
+def _tree_to_numpy(tree: Any) -> Any:
+    return jax.tree_util.tree_map(lambda x: np.asarray(x, dtype=np.float32), tree)
+
+
+def grad_comparator(rtol: float = 1e-4, atol: float = 1e-6, max_bad_fraction: float = 1e-6):
+    """Fuzzy gradient agreement (§3.4 'within specified tolerances')."""
+
+    def cmp(a: Any, b: Any) -> bool:
+        la = jax.tree_util.tree_leaves(a["grads"])
+        lb = jax.tree_util.tree_leaves(b["grads"])
+        if len(la) != len(lb):
+            return False
+        bad = 0
+        total = 0
+        for xa, xb in zip(la, lb):
+            if xa.shape != xb.shape:
+                return False
+            ok = np.isclose(xa, xb, rtol=rtol, atol=atol)
+            bad += ok.size - int(np.count_nonzero(ok))
+            total += ok.size
+        return total == 0 or (bad / total) <= max_bad_fraction
+
+    return cmp
+
+
+def _grad_corruptor(output: Any, rng) -> Any:
+    """SDC model: flip a random scale on one gradient leaf."""
+    out = {k: v for k, v in output.items()}
+    leaves, treedef = jax.tree_util.tree_flatten(out["grads"])
+    idx = rng.randrange(len(leaves))
+    noise = 1.0 + 0.5 * rng.random()
+    leaves = [l * noise if i == idx else l for i, l in enumerate(leaves)]
+    out["grads"] = jax.tree_util.tree_unflatten(treedef, leaves)
+    return out
+
+
+@dataclass
+class GridTrainResult:
+    losses: List[float]
+    steps_completed: int
+    metrics: Any  # SimMetrics
+    credit_total: Dict[str, float]
+    jobs_retried: int
+    virtual_time: float
+
+    @property
+    def final_loss(self) -> float:
+        return self.losses[-1] if self.losses else float("nan")
+
+
+class GridTrainer:
+    """Trains a model through the BOINC grid (virtual time, real compute)."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        data_cfg: DataConfig,
+        opt_cfg: AdamWConfig,
+        n_steps: int,
+        n_hosts: int = 12,
+        seed: int = 0,
+        adaptive_replication: bool = True,
+        min_quorum: int = 2,
+        error_prob: float = 0.0,
+        malicious_fraction: float = 0.0,
+        availability: float = 1.0,
+        churn_rate: float = 0.0,
+        delay_bound: float = 4 * 3600.0,
+        horizon: float = 90 * 86400.0,
+    ) -> None:
+        self.cfg = cfg
+        self.data_cfg = data_cfg
+        self.opt_cfg = opt_cfg
+        self.n_steps = n_steps
+        self.n_shards = data_cfg.n_shards
+
+        key = jax.random.PRNGKey(seed)
+        self.params = init_params(key, model_spec(cfg))
+        self.opt_state = init_state(self.params)
+        self._grad_fn = jax.jit(make_grad_step(cfg))
+        self._apply = jax.jit(
+            lambda p, g, s: apply_updates(opt_cfg, p, g, s)
+        )
+
+        # tokens per microbatch job -> est_flop_count (§3.3 / §6.3)
+        tokens = data_cfg.batch_size * data_cfg.seq_len
+        self._est_flops = cfg.train_flops_per_token() * tokens
+
+        self.server = ProjectServer(name="grid-train", purge_delay=1e18)
+        comparator = grad_comparator()
+        app = App(
+            name="grad",
+            min_quorum=min_quorum,
+            init_ninstances=min_quorum,
+            max_error_instances=8,
+            max_success_instances=12,
+            delay_bound=delay_bound,
+            adaptive_replication=adaptive_replication,
+            comparator=comparator,
+            fraction_done_exact=True,
+        )
+        for osn in ("windows", "mac", "linux"):
+            app.add_version(
+                AppVersion(
+                    id=next_id("appver"),
+                    app_name="grad",
+                    platform=Platform(osn, "x86_64"),
+                    version_num=1,
+                    plan_class=default_cpu_plan_class(),
+                )
+            )
+        self.server.add_app(app)
+        self.server.assimilators["grad"] = self._assimilate
+        self._app = app
+
+        population = make_population(
+            n_hosts,
+            seed=seed + 1,
+            error_prob=error_prob,
+            malicious_fraction=malicious_fraction,
+            availability=availability,
+            churn_rate=churn_rate,
+            horizon=horizon,
+        )
+        self.sim = GridSimulation(
+            self.server,
+            population,
+            seed=seed + 2,
+            executor=self._execute,
+            corruptor=_grad_corruptor,
+        )
+        self.horizon = horizon
+        self._grad_cache: Dict[Tuple[int, int], Any] = {}
+        self._pending: Dict[int, Dict[int, Any]] = {}  # step -> shard -> grads
+        self._job_meta: Dict[int, Tuple[int, int]] = {}  # job_id -> (step, shard)
+        self.losses: List[float] = []
+        self.steps_completed = 0
+        self._delay_bound = delay_bound
+
+    # ------------------------------------------------------------------
+
+    def _submit_step_jobs(self, step: int, now: float) -> None:
+        self._pending[step] = {}
+        for shard in range(self.n_shards):
+            job = Job(
+                id=next_id("job"),
+                app_name="grad",
+                est_flop_count=self._est_flops,
+                delay_bound=self._delay_bound,
+                submitter="trainer",
+                payload=("grad", step, shard),
+            )
+            self._job_meta[job.id] = (step, shard)
+            self.server.submit_job(job, now)
+
+    # ------------------------------------------------------------------
+
+    def _execute(self, job: Job, host) -> Any:
+        """Real JAX compute for a job (cached: replicas see identical data,
+        hence identical correct results — homogeneous redundancy)."""
+        _, step, shard = job.payload
+        key = (step, shard)
+        if key not in self._grad_cache:
+            batch_np = make_batch(self.data_cfg, shard, step)
+            batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+            grads, metrics = self._grad_fn(self.params, batch)
+            self._grad_cache[key] = {
+                "grads": _tree_to_numpy(grads),
+                "loss": float(metrics["loss"]),
+            }
+        return self._grad_cache[key]
+
+    # ------------------------------------------------------------------
+
+    def _assimilate(self, job: Job, output: Any) -> None:
+        meta = self._job_meta.get(job.id)
+        if meta is None:
+            return
+        step, shard = meta
+        if output is None:
+            # job failed outright (error limits): resubmit the (step, shard)
+            if shard not in self._pending.get(step, {}):
+                replacement = Job(
+                    id=next_id("job"),
+                    app_name="grad",
+                    est_flop_count=self._est_flops,
+                    delay_bound=self._delay_bound,
+                    submitter="trainer",
+                    payload=("grad", step, shard),
+                )
+                self._job_meta[replacement.id] = (step, shard)
+                self.server.submit_job(replacement, self.sim.now)
+            return
+        bucket = self._pending.get(step)
+        if bucket is None or shard in bucket:
+            return
+        bucket[shard] = output
+        if len(bucket) == self.n_shards and step == self.steps_completed:
+            self._apply_step(step)
+
+    def _apply_step(self, step: int) -> None:
+        bucket = self._pending.pop(step)
+        outs = [bucket[s] for s in range(self.n_shards)]
+        loss = float(np.mean([o["loss"] for o in outs]))
+        grads = jax.tree_util.tree_map(
+            lambda *xs: jnp.asarray(np.mean(np.stack(xs), axis=0)),
+            *[o["grads"] for o in outs],
+        )
+        self.params, self.opt_state, _ = self._apply(self.params, grads, self.opt_state)
+        self.losses.append(loss)
+        self.steps_completed = step + 1
+        # free the cache for this step (file deleter analogue)
+        for shard in range(self.n_shards):
+            self._grad_cache.pop((step, shard), None)
+        if self.steps_completed < self.n_steps:
+            self._submit_step_jobs(self.steps_completed, self.sim.now)
+
+    # ------------------------------------------------------------------
+
+    def run(self) -> GridTrainResult:
+        self._submit_step_jobs(0, 0.0)
+        # run in windows so we can stop as soon as training finishes
+        window = 6 * 3600.0
+        t = 0.0
+        while self.steps_completed < self.n_steps and t < self.horizon:
+            t = min(self.horizon, t + window)
+            self.sim.run(t)
+        self.sim.audit_validation()
+        retries = sum(tr.metrics.retries_created for tr in self.server.transitioners)
+        return GridTrainResult(
+            losses=self.losses,
+            steps_completed=self.steps_completed,
+            metrics=self.sim.metrics,
+            credit_total=dict(self.server.credit.total),
+            jobs_retried=retries,
+            virtual_time=self.sim.now,
+        )

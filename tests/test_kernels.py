@@ -1,0 +1,138 @@
+"""Per-kernel shape/dtype sweeps, assert_allclose vs the pure-jnp oracles
+(interpret=True executes the Pallas kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.int8_quant.ops import int8_quantize, quantize_dequantize
+from repro.kernels.int8_quant.ref import int8_quantize_ref
+from repro.kernels.quorum_compare.ops import quorum_compare, tree_quorum_agree
+from repro.kernels.quorum_compare.ref import quorum_compare_ref
+from repro.kernels.rmsnorm.ops import rmsnorm
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+from repro.kernels.ssd_scan.ops import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_ref
+from repro.kernels.swiglu.ops import swiglu
+from repro.kernels.swiglu.ref import swiglu_ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize(
+        "b,s,h,kv,d,causal,dtype",
+        [
+            (2, 256, 8, 4, 64, True, jnp.float32),
+            (1, 384, 4, 1, 128, True, jnp.float32),
+            (2, 200, 4, 4, 48, False, jnp.float32),
+            (1, 256, 8, 2, 128, False, jnp.float32),
+            (1, 256, 4, 2, 64, True, jnp.bfloat16),
+            (1, 130, 2, 2, 32, True, jnp.float32),  # ragged padding path
+        ],
+    )
+    def test_matches_oracle(self, b, s, h, kv, d, causal, dtype):
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (b, s, h, d), jnp.float32).astype(dtype)
+        k = jax.random.normal(ks[1], (b, s, kv, d), jnp.float32).astype(dtype)
+        v = jax.random.normal(ks[2], (b, s, kv, d), jnp.float32).astype(dtype)
+        out = flash_attention(q, k, v, causal=causal, interpret=True)
+        qh, kh, vh = (jnp.moveaxis(x, 1, 2) for x in (q, k, v))
+        ref = jnp.moveaxis(attention_ref(qh, kh, vh, causal=causal), 1, 2)
+        tol = 2e-5 if dtype == jnp.float32 else 2e-2
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=tol, rtol=tol
+        )
+
+
+class TestSSDScan:
+    @pytest.mark.parametrize(
+        "b,s,h,p,g,n,bq",
+        [
+            (2, 256, 4, 64, 1, 64, 128),
+            (1, 200, 8, 32, 2, 32, 64),  # padding path + groups
+            (1, 128, 2, 16, 1, 128, 128),
+        ],
+    )
+    def test_matches_sequential_recurrence(self, b, s, h, p, g, n, bq):
+        ks = jax.random.split(KEY, 5)
+        x = jax.random.normal(ks[0], (b, s, h, p), jnp.float32)
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h))) * 0.05 + 0.001
+        A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+        Bm = jax.random.normal(ks[3], (b, s, g, n), jnp.float32) * 0.3
+        Cm = jax.random.normal(ks[4], (b, s, g, n), jnp.float32) * 0.3
+        y, st_ = ssd_scan(x, dt, A, Bm, Cm, block_q=bq, interpret=True)
+        yr, str_ = ssd_ref(x, dt, A, Bm, Cm)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=3e-4, rtol=3e-4)
+        np.testing.assert_allclose(np.asarray(st_), np.asarray(str_), atol=3e-4, rtol=3e-4)
+
+
+class TestRMSNorm:
+    @pytest.mark.parametrize("shape", [(4, 256), (3, 77, 256), (2, 5, 8, 128)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_oracle(self, shape, dtype):
+        x = jax.random.normal(KEY, shape, jnp.float32).astype(dtype)
+        sc = jax.random.normal(jax.random.PRNGKey(1), (shape[-1],), jnp.float32)
+        out = rmsnorm(x, sc, interpret=True)
+        ref = rmsnorm_ref(x, sc)
+        tol = 1e-5 if dtype == jnp.float32 else 2e-2
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=tol, rtol=tol
+        )
+
+
+class TestSwiGLU:
+    @pytest.mark.parametrize("shape", [(16, 128), (5, 100, 128), (1, 7, 384)])
+    def test_matches_oracle(self, shape):
+        g = jax.random.normal(KEY, shape, jnp.float32)
+        u = jax.random.normal(jax.random.PRNGKey(3), shape, jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(swiglu(g, u, interpret=True)),
+            np.asarray(swiglu_ref(g, u)),
+            atol=1e-6,
+        )
+
+
+class TestQuorumCompare:
+    @settings(max_examples=15, deadline=None)
+    @given(
+        n=st.integers(min_value=10, max_value=5000),
+        bad_frac=st.floats(min_value=0.0, max_value=0.2),
+    )
+    def test_bad_count_matches_oracle(self, n, bad_frac):
+        rng = np.random.default_rng(n)
+        a = rng.standard_normal(n).astype(np.float32)
+        b = a.copy()
+        n_bad = int(n * bad_frac)
+        if n_bad:
+            b[:n_bad] += 1.0
+        nb, sq = quorum_compare(jnp.asarray(a), jnp.asarray(b), rtol=1e-5, atol=1e-6, interpret=True)
+        nbr, sqr = quorum_compare_ref(jnp.asarray(a), jnp.asarray(b), rtol=1e-5, atol=1e-6)
+        assert float(nb) == float(nbr)
+        np.testing.assert_allclose(float(sq), float(sqr), rtol=1e-5)
+
+    def test_tree_agreement(self):
+        a = {"w": jnp.ones((100, 7)), "b": jnp.zeros((13,))}
+        assert tree_quorum_agree(a, jax.tree_util.tree_map(lambda x: x + 1e-9, a))
+        b = {"w": jnp.ones((100, 7)).at[0, 0].set(5.0), "b": jnp.zeros((13,))}
+        assert not tree_quorum_agree(a, b)
+        assert not tree_quorum_agree(a, {"w": jnp.ones((100, 7))})  # missing leaf
+
+
+class TestInt8Quant:
+    @pytest.mark.parametrize("shape", [(100, 300), (17,), (4, 5, 6)])
+    def test_roundtrip_error_bounded(self, shape):
+        x = jax.random.normal(KEY, shape, jnp.float32) * 3.0
+        rt = quantize_dequantize(x)
+        amax = float(jnp.max(jnp.abs(x)))
+        assert float(jnp.max(jnp.abs(rt - x))) <= amax / 127.0 + 1e-7
+
+    def test_matches_oracle(self):
+        x = jax.random.normal(KEY, (512, 256), jnp.float32)
+        q, s = int8_quantize(x, block_rows=256, interpret=True)
+        qr, sr = int8_quantize_ref(np.asarray(x).reshape(512, 256), 256)
+        np.testing.assert_array_equal(np.asarray(q), qr)
+        np.testing.assert_allclose(np.asarray(s), sr, rtol=1e-6)

@@ -1,0 +1,181 @@
+"""Hypothesis property tests on the system's invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    AdaptiveReplication,
+    CreditSystem,
+    ExponentialBackoff,
+    InstanceOutcome,
+    InstanceState,
+    JobInstance,
+    LinearBoundedAllocator,
+    check_set,
+    fuzzy_comparator,
+    next_id,
+    reset_ids,
+)
+from repro.data.pipeline import DataConfig, make_batch
+
+
+def _inst(output):
+    return JobInstance(
+        id=next_id("instance"),
+        job_id=1,
+        state=InstanceState.OVER,
+        outcome=InstanceOutcome.SUCCESS,
+        output=output,
+    )
+
+
+# ---------------------------------------------------------------------------
+# validator invariants (§3.4)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    outputs=st.lists(st.integers(min_value=0, max_value=3), min_size=1, max_size=9),
+    quorum=st.integers(min_value=1, max_value=4),
+)
+def test_quorum_requires_min_agreeing_group(outputs, quorum):
+    """Canonical exists iff some value occurs >= min_quorum times, and the
+    canonical instance always belongs to (one of) the largest groups."""
+    reset_ids()
+    insts = [_inst(float(o)) for o in outputs]
+    counts = {v: outputs.count(v) for v in set(outputs)}
+    best = max(counts.values())
+    r = check_set(insts, None, quorum)
+    if best >= quorum:
+        assert r.canonical is not None
+        assert counts[int(r.canonical.output)] == best or counts[int(r.canonical.output)] >= quorum
+        # valid/invalid partition the successes
+        assert len(r.valid) + len(r.invalid) == len(insts)
+        # every valid instance agrees with the canonical
+        for v in r.valid:
+            assert v.output == r.canonical.output
+    else:
+        assert r.canonical is None
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    base=st.floats(min_value=-1e3, max_value=1e3, allow_nan=False),
+    scale=st.floats(min_value=1e-9, max_value=1e-6),
+)
+def test_fuzzy_comparator_tolerates_small_noise(base, scale):
+    cmp = fuzzy_comparator(rtol=1e-4, atol=1e-6)
+    a = np.full(64, base, dtype=np.float64)
+    b = a + scale * max(abs(base), 1.0) * 0.01
+    assert cmp(a, b)
+
+
+# ---------------------------------------------------------------------------
+# adaptive replication (§3.4): malicious hosts never hold reputation
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    events=st.lists(st.booleans(), min_size=1, max_size=200),
+    threshold=st.integers(min_value=1, max_value=20),
+)
+def test_reputation_resets_on_any_invalid(events, threshold):
+    ar = AdaptiveReplication(threshold=threshold, seed=1)
+    run = 0
+    for ok in events:
+        if ok:
+            ar.on_validated(1, 1)
+            run += 1
+        else:
+            ar.on_invalid(1, 1)
+            run = 0
+        assert ar.reputation(1, 1) == run
+        p = ar.replication_probability(1, 1)
+        assert 0.0 < p <= 1.0
+        if run <= threshold:
+            assert p == 1.0  # below threshold: always replicate
+
+
+@settings(max_examples=20, deadline=None)
+@given(n_valid=st.integers(min_value=0, max_value=10_000))
+def test_replication_probability_monotone_decreasing(n_valid):
+    ar = AdaptiveReplication(threshold=10)
+    for _ in range(n_valid):
+        ar.on_validated(2, 2)
+    p1 = ar.replication_probability(2, 2)
+    ar.on_validated(2, 2)
+    assert ar.replication_probability(2, 2) <= p1
+
+
+# ---------------------------------------------------------------------------
+# linear-bounded allocation (§3.9)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    debits=st.lists(
+        st.tuples(st.floats(min_value=0.1, max_value=100.0), st.floats(min_value=0.0, max_value=10.0)),
+        min_size=1,
+        max_size=50,
+    )
+)
+def test_balance_never_exceeds_cap(debits):
+    alloc = LinearBoundedAllocator(default_rate=1.0, default_cap=100.0)
+    alloc.add_account("x", now=0.0)
+    t = 0.0
+    for dt, amount in debits:
+        t += dt
+        assert alloc.balance("x", t) <= 100.0 + 1e-9
+        alloc.debit("x", amount, t)
+
+
+# ---------------------------------------------------------------------------
+# backoff monotonicity (§2.2)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(n_failures=st.integers(min_value=1, max_value=30))
+def test_backoff_never_exceeds_max(n_failures):
+    b = ExponentialBackoff(min_interval=10, max_interval=500, jitter=0.0)
+    for _ in range(n_failures):
+        b.register_failure(0.0)
+    assert 10 <= b.current_interval() <= 500
+
+
+# ---------------------------------------------------------------------------
+# credit outlier robustness (§7)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    honest=st.lists(st.floats(min_value=1.0, max_value=2.0), min_size=2, max_size=6),
+    cheat=st.floats(min_value=100.0, max_value=1e6),
+)
+def test_grant_bounded_by_honest_claims(honest, cheat):
+    granted = CreditSystem.grant_amount(honest + [cheat])
+    assert granted <= max(honest) * 1.0 + max(honest)  # cheater can't inflate much
+    assert granted >= min(honest) * 0.5
+
+
+# ---------------------------------------------------------------------------
+# data pipeline determinism (replication validation soundness)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    shard=st.integers(min_value=0, max_value=7),
+    step=st.integers(min_value=0, max_value=1000),
+)
+def test_batches_deterministic_and_stream_distinct(shard, step):
+    cfg = DataConfig(vocab=128, seq_len=16, batch_size=2, seed=5)
+    a = make_batch(cfg, shard, step)
+    b = make_batch(cfg, shard, step)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k])
+    c = make_batch(cfg, shard, step + 1)
+    assert any(not np.array_equal(a[k], c[k]) for k in a)

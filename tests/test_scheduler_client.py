@@ -1,0 +1,353 @@
+"""Server dispatch policy (§6.4) and client scheduling/work fetch (§6.1-6.2)."""
+import pytest
+
+from repro.core import (
+    App,
+    AppVersion,
+    Client,
+    ClientJob,
+    ClientPrefs,
+    ClientResource,
+    CompletedResult,
+    Feeder,
+    HRLevel,
+    Host,
+    InstanceOutcome,
+    InstanceState,
+    Job,
+    KeywordPrefs,
+    Platform,
+    ProcessingResource,
+    ProjectAttachment,
+    ProjectServer,
+    ResourceRequest,
+    ResourceType,
+    ScheduleRequest,
+    default_cpu_plan_class,
+    next_id,
+    reset_ids,
+)
+from repro.core.client import RunState, wrr_simulate
+
+
+def make_server(hr_level=HRLevel.NONE, locality=False, keywords=()):
+    reset_ids()
+    server = ProjectServer(name="p", purge_delay=1e18)
+    app = App(
+        name="a",
+        min_quorum=1,
+        init_ninstances=1,
+        hr_level=hr_level,
+        uses_locality=locality,
+    )
+    for osn in ("windows", "linux"):
+        app.add_version(
+            AppVersion(
+                id=next_id("appver"),
+                app_name="a",
+                platform=Platform(osn, "x86_64"),
+                version_num=1,
+                plan_class=default_cpu_plan_class(),
+            )
+        )
+    server.add_app(app)
+    return server
+
+
+def make_host(hid=1, os_name="windows", flops=16.5e9):
+    return Host(
+        id=hid,
+        platforms=(Platform(os_name, "x86_64"),),
+        resources={
+            ResourceType.CPU: ProcessingResource(ResourceType.CPU, 4, flops)
+        },
+        volunteer_id=hid,
+    )
+
+
+def req(host_id, runtime=1e5, idle=4.0, **kw):
+    return ScheduleRequest(
+        host_id=host_id,
+        requests={ResourceType.CPU: ResourceRequest(req_runtime=runtime, req_idle=idle)},
+        **kw,
+    )
+
+
+class TestDispatch:
+    def test_basic_dispatch_fills_request(self):
+        server = make_server()
+        host = server.add_host(make_host())
+        for _ in range(10):
+            server.submit_job(Job(id=next_id("job"), app_name="a", est_flop_count=16.5e9 * 3600))
+        server.tick(0.0)
+        reply = server.rpc(req(host.id, runtime=4 * 3600.0, idle=4), 0.0)
+        assert reply.jobs, "no jobs dispatched"
+        # instances marked in progress with deadlines
+        for dj in reply.jobs:
+            assert dj.instance.state == InstanceState.IN_PROGRESS
+            assert dj.instance.deadline > 0
+
+    def test_platform_filter(self):
+        server = make_server()
+        mac = make_host(os_name="mac")
+        server.add_host(mac)
+        server.submit_job(Job(id=next_id("job"), app_name="a", est_flop_count=1e9))
+        server.tick(0.0)
+        reply = server.rpc(req(mac.id), 0.0)
+        assert not reply.jobs  # no mac app version exists
+
+    def test_one_instance_per_volunteer(self):
+        server = make_server()
+        server.store.apps["a"].min_quorum = 2
+        server.store.apps["a"].init_ninstances = 2
+        host = server.add_host(make_host())
+        job = server.submit_job(Job(id=next_id("job"), app_name="a", est_flop_count=1e9,
+                                    min_quorum=2, init_ninstances=2))
+        server.tick(0.0)
+        r1 = server.rpc(req(host.id), 0.0)
+        assert len(r1.jobs) == 1
+        r2 = server.rpc(req(host.id), 1.0)
+        assert not r2.jobs  # second instance must go to a different volunteer
+
+    def test_deadline_infeasible_skipped(self):
+        server = make_server()
+        slow = make_host(flops=1e6)  # hopeless host
+        server.add_host(slow)
+        server.submit_job(
+            Job(id=next_id("job"), app_name="a", est_flop_count=1e15, delay_bound=60.0)
+        )
+        server.tick(0.0)
+        reply = server.rpc(req(slow.id), 0.0)
+        assert not reply.jobs
+
+    def test_keyword_no_filtered(self):
+        server = make_server()
+        host = server.add_host(make_host())
+        server.submit_job(
+            Job(id=next_id("job"), app_name="a", est_flop_count=1e9, keywords=("biomedicine",))
+        )
+        server.tick(0.0)
+        reply = server.rpc(
+            req(host.id, keyword_prefs=KeywordPrefs.make(no=["biomedicine"])), 0.0
+        )
+        assert not reply.jobs
+
+    def test_locality_scheduling_prefers_resident_files(self):
+        server = make_server(locality=True)
+        host = server.add_host(make_host())
+        j_far = server.submit_job(
+            Job(id=next_id("job"), app_name="a", est_flop_count=1e9, input_files=("f_other",))
+        )
+        j_near = server.submit_job(
+            Job(id=next_id("job"), app_name="a", est_flop_count=1e9, input_files=("f_mine",))
+        )
+        server.tick(0.0)
+        reply = server.rpc(
+            req(host.id, runtime=1.0, idle=1.0, sticky_files=("f_mine",)), 0.0
+        )
+        assert reply.jobs[0].job.id == j_near.id
+
+    def test_hr_class_locked_after_first_dispatch(self):
+        server = make_server(hr_level=HRLevel.COARSE)
+        server.store.apps["a"].min_quorum = 2
+        win = server.add_host(make_host(1, "windows"))
+        linux = server.add_host(make_host(2, "linux"))
+        job = server.submit_job(
+            Job(id=next_id("job"), app_name="a", est_flop_count=1e9, min_quorum=2, init_ninstances=2)
+        )
+        server.tick(0.0)
+        r1 = server.rpc(req(win.id), 0.0)
+        assert r1.jobs
+        assert job.hr_class is not None
+        r2 = server.rpc(req(linux.id), 1.0)
+        assert not r2.jobs  # different equivalence class
+
+    def test_completed_report_updates_instance(self):
+        server = make_server()
+        host = server.add_host(make_host())
+        job = server.submit_job(Job(id=next_id("job"), app_name="a", est_flop_count=1e9))
+        server.tick(0.0)
+        r1 = server.rpc(req(host.id), 0.0)
+        inst = r1.jobs[0].instance
+        server.rpc(
+            ScheduleRequest(
+                host_id=host.id,
+                completed=[
+                    CompletedResult(
+                        instance_id=inst.id,
+                        outcome=InstanceOutcome.SUCCESS,
+                        runtime=100.0,
+                        peak_flop_count=1e12,
+                        output=1.0,
+                    )
+                ],
+            ),
+            10.0,
+        )
+        assert inst.state == InstanceState.OVER
+        assert inst.outcome == InstanceOutcome.SUCCESS
+        server.tick(11.0)
+        assert job.canonical_instance_id is not None
+
+
+class TestFeeder:
+    def test_feeder_interleaves_apps(self):
+        reset_ids()
+        server = ProjectServer(name="p", cache_size=8, purge_delay=1e18)
+        for name in ("a", "b"):
+            app = App(name=name, min_quorum=1, init_ninstances=1)
+            app.add_version(
+                AppVersion(
+                    id=next_id("appver"),
+                    app_name=name,
+                    platform=Platform("windows", "x86_64"),
+                    version_num=1,
+                    plan_class=default_cpu_plan_class(),
+                )
+            )
+            server.add_app(app)
+        for _ in range(20):
+            server.submit_job(Job(id=next_id("job"), app_name="a", est_flop_count=1e9))
+            server.submit_job(Job(id=next_id("job"), app_name="b", est_flop_count=1e9))
+        server.tick(0.0)
+        apps_in_cache = {s.app_name for s in server.feeder.slots if s is not None}
+        assert apps_in_cache == {"a", "b"}  # category diversity (§5.1)
+
+
+# ---------------------------------------------------------------------------
+# client: WRR simulation, EDF, work fetch (§6.1–6.2)
+# ---------------------------------------------------------------------------
+
+
+def make_client(ncpus=2, flops=1e9):
+    c = Client(
+        host_id=1,
+        resources={ResourceType.CPU: ClientResource(ResourceType.CPU, ncpus, flops)},
+        prefs=ClientPrefs(buffer_lo_days=0.1, buffer_hi_days=0.5),
+    )
+    c.attach(ProjectAttachment(name="p"))
+    return c
+
+
+def cjob(iid, est_s=3600.0, deadline=1e9, cpus=1.0, project="p"):
+    return ClientJob(
+        instance_id=iid,
+        job_id=iid,
+        project=project,
+        app_name="a",
+        usage={ResourceType.CPU: cpus},
+        est_flops=1e9,
+        est_flop_count=est_s * 1e9,
+        deadline=deadline,
+    )
+
+
+class TestClientScheduling:
+    def test_maximal_feasible_set(self):
+        c = make_client(ncpus=2)
+        c.jobs = [cjob(1), cjob(2), cjob(3)]
+        running = c.schedule(0.0)
+        assert len(running) == 2  # 2 CPUs
+
+    def test_edf_override_on_predicted_miss(self):
+        c = make_client(ncpus=1)
+        # urgent job queued behind a long job
+        c.jobs = [cjob(1, est_s=10 * 3600, deadline=1e9), cjob(2, est_s=3600, deadline=2 * 3600.0)]
+        running = c.schedule(0.0)
+        assert running[0].instance_id == 2  # deadline-miss job runs first EDF
+
+    def test_ram_constraint(self):
+        c = make_client(ncpus=4)
+        c.ram_bytes = 1e9
+        j1, j2 = cjob(1), cjob(2)
+        j1.est_wss = 0.8e9
+        j2.est_wss = 0.8e9
+        c.jobs = [j1, j2]
+        running = c.schedule(0.0)
+        assert len(running) == 1  # both don't fit in RAM
+
+    def test_wrr_shortfall_empty_queue(self):
+        c = make_client(ncpus=2)
+        sim = wrr_simulate([], c.resources, {}, c.prefs, 0.0)
+        full = c.prefs.b_hi * 2
+        assert sim.shortfall[ResourceType.CPU] == pytest.approx(full)
+        assert sim.idle_instances[ResourceType.CPU] == 2
+
+    def test_work_fetch_targets_highest_priority_project(self):
+        c = make_client()
+        c.attach(ProjectAttachment(name="q", resource_share=300.0))
+        # make p over-served so q has higher priority
+        c.rec.debit("p", 1e5, 0.0)
+        wr = c.choose_fetch_project(1.0)
+        assert wr is not None and wr.project == "q"
+        assert wr.requests[ResourceType.CPU].req_runtime > 0
+
+    def test_no_fetch_when_buffer_full(self):
+        c = make_client(ncpus=1)
+        c.jobs = [cjob(i, est_s=100 * 3600) for i in range(1, 4)]
+        assert c.choose_fetch_project(0.0) is None
+
+    def test_backoff_blocks_fetch(self):
+        c = make_client()
+        c.projects["p"].backoff_for(ResourceType.CPU).register_failure(0.0)
+        assert c.choose_fetch_project(1.0) is None  # only project is backed off
+
+    def test_report_batching_and_deadline_flush(self):
+        c = make_client()
+        done = cjob(1, deadline=10_000.0)
+        done.state = RunState.DONE
+        c.completed = [done]
+        assert not c.should_report("p", 0.0)  # defer: batch of 1, far deadline
+        assert c.should_report("p", 9_500.0)  # deadline approaching
+        c.completed = [cjob(i, deadline=1e9) for i in range(4)]
+        assert c.should_report("p", 0.0)  # batch threshold
+
+    def test_am_attach_detach(self):
+        c = make_client()
+        c.jobs = [cjob(1)]
+        c.apply_am_reply([ProjectAttachment(name="new")], ["p"], 0.0)
+        assert "new" in c.projects and "p" not in c.projects
+        assert not c.jobs  # p's jobs abandoned (§2.3)
+
+
+class TestTrickleUp:
+    """Trickle-up messages (§3.5): immediate server-side handling."""
+
+    def test_custom_handler_invoked(self):
+        from repro.core.scheduler import TrickleUp
+
+        server = make_server()
+        host = server.add_host(make_host())
+        server.submit_job(Job(id=next_id("job"), app_name="a", est_flop_count=1e12))
+        server.tick(0.0)
+        r = server.rpc(req(host.id), 0.0)
+        inst = r.jobs[0].instance
+        got = []
+        server.trickle_handlers["a"] = lambda i, t, now: got.append((i.id, t.fraction_done))
+        server.rpc(
+            ScheduleRequest(
+                host_id=host.id,
+                trickles=[TrickleUp(instance_id=inst.id, fraction_done=0.5)],
+            ),
+            10.0,
+        )
+        assert got == [(inst.id, 0.5)]
+
+    def test_default_handler_grants_partial_credit(self):
+        from repro.core.scheduler import TrickleUp
+
+        server = make_server()
+        host = server.add_host(make_host())
+        server.submit_job(Job(id=next_id("job"), app_name="a", est_flop_count=86400.0 * 1e9))
+        server.tick(0.0)
+        r = server.rpc(req(host.id), 0.0)
+        inst = r.jobs[0].instance
+        server.rpc(
+            ScheduleRequest(
+                host_id=host.id,
+                trickles=[TrickleUp(instance_id=inst.id, fraction_done=0.25)],
+            ),
+            10.0,
+        )
+        key = f"host:{host.id}:partial"
+        assert server.credit.total.get(key, 0.0) == pytest.approx(0.25)

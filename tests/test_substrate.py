@@ -1,0 +1,175 @@
+"""Data pipeline, optimizer, compression, checkpointing, fault tolerance."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer, CheckpointPolicy
+from repro.data import DataConfig, DataShard, global_batch, make_batch
+from repro.distributed import (
+    HeartbeatMonitor,
+    StragglerPolicy,
+    candidate_meshes,
+    plan_elastic_config,
+)
+from repro.optim import (
+    AdamWConfig,
+    apply_updates,
+    compress_tree,
+    compressed_bytes,
+    decompress_tree,
+    ef_quantize_tree,
+    init_residual,
+    init_state,
+    lr_at,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+class TestData:
+    def test_deterministic_per_shard_step(self):
+        cfg = DataConfig(vocab=100, seq_len=32, batch_size=4, n_shards=2)
+        a = make_batch(cfg, 0, 5)
+        b = make_batch(cfg, 0, 5)
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+        c = make_batch(cfg, 1, 5)
+        assert not np.array_equal(a["tokens"], c["tokens"])
+
+    def test_labels_are_shifted_tokens(self):
+        cfg = DataConfig(vocab=100, seq_len=32, batch_size=2)
+        b = make_batch(cfg, 0, 0)
+        np.testing.assert_array_equal(b["labels"][:, :-1], b["tokens"][:, 1:])
+
+    def test_embeds_mode(self):
+        cfg = DataConfig(vocab=50, seq_len=16, batch_size=2, input_mode="embeds", d_model=8)
+        b = make_batch(cfg, 0, 0)
+        assert b["embeds"].shape == (2, 16, 8)
+
+    def test_global_batch_concatenates_shards(self):
+        cfg = DataConfig(vocab=50, seq_len=16, batch_size=2, n_shards=3)
+        g = global_batch(cfg, 0)
+        assert g["tokens"].shape == (6, 16)
+
+    def test_shard_iterator(self):
+        cfg = DataConfig(vocab=50, seq_len=8, batch_size=1)
+        it = iter(DataShard(cfg, shard=0))
+        b0, b1 = next(it), next(it)
+        assert not np.array_equal(b0["tokens"], b1["tokens"])
+
+
+class TestOptim:
+    def test_schedules(self):
+        cfg = AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=100, schedule="cosine")
+        assert float(lr_at(cfg, jnp.asarray(0))) < 1e-3 * 0.2
+        assert float(lr_at(cfg, jnp.asarray(10))) == pytest.approx(1e-3, rel=0.1)
+        assert float(lr_at(cfg, jnp.asarray(100))) == pytest.approx(1e-4, rel=0.1)
+        wsd = AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=100, schedule="wsd")
+        assert float(lr_at(wsd, jnp.asarray(50))) == pytest.approx(1e-3, rel=0.05)
+
+    def test_adamw_reduces_quadratic(self):
+        params = {"w": jnp.asarray([5.0, -3.0])}
+        state = init_state(params)
+        cfg = AdamWConfig(lr=0.1, warmup_steps=1, total_steps=200, weight_decay=0.0, clip_norm=0)
+        for _ in range(150):
+            g = {"w": 2 * params["w"]}
+            params, state, _ = apply_updates(cfg, params, g, state)
+        assert float(jnp.max(jnp.abs(params["w"]))) < 0.5
+
+    def test_clip_norm_metric(self):
+        params = {"w": jnp.zeros(3)}
+        state = init_state(params)
+        cfg = AdamWConfig(clip_norm=1.0)
+        _, _, m = apply_updates(cfg, params, {"w": jnp.asarray([3.0, 4.0, 0.0])}, state)
+        assert float(m["grad_norm"]) == pytest.approx(5.0)
+
+    def test_error_feedback_compensates_bias(self):
+        g = {"w": jax.random.normal(KEY, (256,)) * 1e-3}
+        res = init_residual(g)
+        total_q = jnp.zeros(256)
+        for _ in range(50):
+            q, res = ef_quantize_tree(g, res)
+            total_q = total_q + q["w"]
+        # accumulated quantized grads track accumulated true grads
+        np.testing.assert_allclose(
+            np.asarray(total_q), np.asarray(g["w"] * 50), atol=float(jnp.max(jnp.abs(g["w"]))) * 2
+        )
+
+    def test_wire_compression_roundtrip(self):
+        tree = {"a": jax.random.normal(KEY, (100, 4)), "b": jnp.ones((7,))}
+        packed = compress_tree(tree)
+        assert compressed_bytes(packed) < 100 * 4 * 4  # ~4x smaller than f32
+        out = decompress_tree(packed)
+        amax = float(jnp.max(jnp.abs(tree["a"])))
+        np.testing.assert_allclose(np.asarray(out["a"]), np.asarray(tree["a"]), atol=amax / 100)
+
+
+class TestCheckpoint:
+    def test_save_restore_roundtrip(self):
+        with tempfile.TemporaryDirectory() as d:
+            ck = Checkpointer(d)
+            tree = {"w": np.arange(6, dtype=np.float32).reshape(2, 3), "n": np.asarray(3)}
+            ck.save(10, {"params": tree})
+            step, out = ck.restore({"params": {"w": np.zeros((2, 3), np.float32), "n": np.asarray(0)}})
+            assert step == 10
+            np.testing.assert_array_equal(out["params"]["w"], tree["w"])
+
+    def test_gc_keeps_latest(self):
+        with tempfile.TemporaryDirectory() as d:
+            ck = Checkpointer(d, keep=2)
+            for s in (1, 2, 3, 4):
+                ck.save(s, {"t": {"x": np.zeros(1)}})
+            assert ck.latest_step() == 4
+            assert len(ck._steps()) == 2
+
+    def test_checksum_validation(self):
+        with tempfile.TemporaryDirectory() as d:
+            ck = Checkpointer(d)
+            path = ck.save(1, {"t": {"x": np.ones(4)}})
+            # corrupt the file (hash validation, §2.2/§3.10)
+            fpath = os.path.join(path, "t.npz")
+            with open(fpath, "r+b") as f:
+                f.seek(30)
+                f.write(b"\x00\x01\x02")
+            with pytest.raises(IOError):
+                ck.restore({"t": {"x": np.zeros(4)}})
+
+    def test_policy_cadence(self):
+        p = CheckpointPolicy(period_steps=10)
+        assert not p.should_checkpoint(5)
+        assert p.should_checkpoint(10)
+
+
+class TestFaultTolerance:
+    def test_heartbeat_death_detection(self):
+        mon = HeartbeatMonitor(period=10.0, max_misses=3)
+        mon.register(1, 0.0)
+        mon.register(2, 0.0)
+        mon.heartbeat(1, 25.0)
+        died = mon.sweep(35.0)
+        assert died == [2]
+        assert mon.live() == [1]
+
+    def test_elastic_plan_preserves_global_batch(self):
+        plan = plan_elastic_config(live_chips=256, global_batch=256, model_axis=16)
+        assert plan is not None
+        data_ways = plan.mesh_shape[0]
+        assert data_ways * plan.microbatch_per_worker * plan.grad_accum_steps == 256
+        # lose half the fleet: still plannable
+        plan2 = plan_elastic_config(live_chips=128, global_batch=256, model_axis=16)
+        assert plan2 is not None
+        assert plan2.mesh_shape[0] == 8
+
+    def test_candidate_meshes_shrink(self):
+        shapes = candidate_meshes(256, model_axis=16)
+        assert shapes[0] == (16, 16)
+        assert (1, 16) in shapes
+
+    def test_straggler_deadline_adapts(self):
+        sp = StragglerPolicy(factor=3.0, min_samples=2)
+        sp.observe(10.0)
+        sp.observe(20.0)
+        assert sp.deadline(100.0) == pytest.approx(100.0 + 45.0)

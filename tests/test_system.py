@@ -1,0 +1,127 @@
+"""End-to-end behaviour tests: the EmBOINC simulator driving real
+server+client code, and the volunteer-grid trainer with injected faults."""
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import (
+    App,
+    AppVersion,
+    GridSimulation,
+    Job,
+    JobState,
+    Platform,
+    ProjectServer,
+    default_cpu_plan_class,
+    fuzzy_comparator,
+    make_population,
+    next_id,
+    reset_ids,
+)
+from repro.data import DataConfig
+from repro.optim import AdamWConfig
+from repro.runtime import GridTrainer
+
+
+def build_sim(n_jobs=60, n_hosts=12, adaptive=False, error_prob=0.0,
+              malicious_fraction=0.0, availability=1.0, churn_rate=0.0,
+              horizon=2 * 86400.0, delay_bound=4 * 3600.0, seed=3):
+    reset_ids()
+    server = ProjectServer(name="p", purge_delay=1e18)
+    app = App(
+        name="w",
+        min_quorum=2,
+        init_ninstances=2,
+        delay_bound=delay_bound,
+        adaptive_replication=adaptive,
+        comparator=fuzzy_comparator(rtol=1e-6, atol=1e-9),
+    )
+    for osn in ("windows", "mac", "linux"):
+        app.add_version(
+            AppVersion(
+                id=next_id("appver"),
+                app_name="w",
+                platform=Platform(osn, "x86_64"),
+                version_num=1,
+                plan_class=default_cpu_plan_class(),
+            )
+        )
+    server.add_app(app)
+    for _ in range(n_jobs):
+        server.submit_job(Job(id=next_id("job"), app_name="w",
+                              est_flop_count=0.2 * 3600 * 16.5e9))
+    pop = make_population(
+        n_hosts, seed=1, availability=availability, error_prob=error_prob,
+        malicious_fraction=malicious_fraction, churn_rate=churn_rate, horizon=horizon,
+    )
+    sim = GridSimulation(server, pop, seed=seed)
+    return server, sim
+
+
+class TestSimulation:
+    def test_all_jobs_complete_in_clean_grid(self):
+        server, sim = build_sim()
+        m = sim.run(2 * 86400.0)
+        sim.audit_validation()
+        counts = server.counts()
+        assert counts["jobs_success"] == 60
+        assert m.wrong_accepted == 0
+
+    def test_corruption_never_accepted_with_full_replication(self):
+        server, sim = build_sim(error_prob=0.05, malicious_fraction=0.2)
+        m = sim.run(3 * 86400.0)
+        sim.audit_validation()
+        assert m.wrong_accepted == 0  # quorum-of-2 catches all corruption
+        assert server.counts()["jobs_success"] >= 50
+
+    def test_churn_jobs_retried_elsewhere(self):
+        server, sim = build_sim(
+            n_hosts=16, churn_rate=1.0 / (1.0 * 86400.0), horizon=4 * 86400.0,
+            delay_bound=2 * 3600.0,
+        )
+        sim.run(4 * 86400.0)
+        sim.audit_validation()
+        counts = server.counts()
+        # work survives departures: the vast majority completes
+        assert counts["jobs_success"] >= 54
+
+    def test_availability_interruption_resumes(self):
+        server, sim = build_sim(availability=0.6, horizon=4 * 86400.0)
+        sim.run(4 * 86400.0)
+        assert server.counts()["jobs_success"] >= 55
+
+    def test_credit_granted_to_valid_instances(self):
+        server, sim = build_sim(n_jobs=30)
+        sim.run(2 * 86400.0)
+        total = sum(v for k, v in server.credit.total.items() if k.startswith("host:"))
+        assert total > 0.0
+
+
+class TestGridTrainer:
+    def test_trains_through_faults(self):
+        reset_ids()
+        cfg = get_smoke_config("qwen3-0.6b").scaled(n_layers=2, d_model=64)
+        dc = DataConfig(vocab=cfg.vocab, seq_len=64, batch_size=4, n_shards=2, seed=3)
+        oc = AdamWConfig(lr=1e-3, warmup_steps=5, total_steps=30)
+        gt = GridTrainer(
+            cfg, dc, oc, n_steps=8, n_hosts=8, seed=0,
+            adaptive_replication=True, error_prob=0.05, malicious_fraction=0.15,
+            availability=0.9,
+        )
+        r = gt.run()
+        assert r.steps_completed == 8
+        assert r.final_loss < r.losses[0]
+        assert r.metrics.wrong_accepted == 0, "corrupted gradient accepted!"
+        assert r.credit_total  # FLOPs ledger populated
+
+    def test_deterministic_data_makes_replicas_comparable(self):
+        reset_ids()
+        cfg = get_smoke_config("mamba2-130m").scaled(n_layers=2, d_model=32)
+        dc = DataConfig(vocab=cfg.vocab, seq_len=32, batch_size=2, n_shards=1, seed=7)
+        oc = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=10)
+        gt = GridTrainer(cfg, dc, oc, n_steps=4, n_hosts=6, seed=1,
+                         adaptive_replication=False, min_quorum=2)
+        r = gt.run()
+        assert r.steps_completed == 4
+        # with quorum-2 on every job, every accepted gradient was replicated
+        assert r.metrics.instances_executed >= 2 * 4

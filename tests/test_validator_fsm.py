@@ -1,0 +1,208 @@
+"""Validator quorum logic (§3.4) and the transitioner FSM (§4)."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    App,
+    AppVersion,
+    InstanceOutcome,
+    InstanceState,
+    Job,
+    JobInstance,
+    JobState,
+    JobStore,
+    Platform,
+    Transitioner,
+    ValidateState,
+    bitwise_equal,
+    check_set,
+    default_cpu_plan_class,
+    fuzzy_comparator,
+    next_id,
+    reset_ids,
+)
+from repro.core.validator import validate_against_canonical
+
+
+def _inst(output, outcome=InstanceOutcome.SUCCESS, iid=None):
+    return JobInstance(
+        id=iid or next_id("instance"),
+        job_id=1,
+        state=InstanceState.OVER,
+        outcome=outcome,
+        output=output,
+    )
+
+
+class TestComparators:
+    def test_bitwise(self):
+        a = np.arange(8, dtype=np.float32)
+        assert bitwise_equal({"x": a}, {"x": a.copy()})
+        b = a.copy()
+        b[3] = np.nextafter(b[3], np.float32(10.0))  # one ULP
+        assert not bitwise_equal({"x": a}, {"x": b})
+
+    def test_fuzzy(self):
+        cmp = fuzzy_comparator(rtol=1e-5)
+        a = np.linspace(1, 2, 100)
+        assert cmp(a, a * (1 + 1e-7))
+        assert not cmp(a, a * 1.01)
+
+    def test_fuzzy_bad_fraction(self):
+        cmp = fuzzy_comparator(rtol=1e-5, max_bad_fraction=0.05)
+        a = np.ones(100)
+        b = a.copy()
+        b[:3] = 2.0  # 3% bad
+        assert cmp(a, b)
+        b[:10] = 2.0  # 10% bad
+        assert not cmp(a, b)
+
+
+class TestCheckSet:
+    def setup_method(self):
+        reset_ids()
+
+    def test_agreeing_pair_forms_quorum(self):
+        r = check_set([_inst(1.0), _inst(1.0)], None, min_quorum=2)
+        assert r.canonical is not None
+        assert len(r.valid) == 2
+
+    def test_disagreeing_pair_inconclusive(self):
+        r = check_set([_inst(1.0), _inst(2.0)], None, min_quorum=2)
+        assert r.canonical is None
+        assert len(r.inconclusive) == 2
+
+    def test_tiebreaker_resolves(self):
+        r = check_set([_inst(1.0), _inst(2.0), _inst(1.0)], None, min_quorum=2)
+        assert r.canonical is not None
+        assert r.canonical.output == 1.0
+        assert len(r.invalid) == 1
+
+    def test_many_distinct_corruptions_need_quorum(self):
+        # 2 agreeing + 3 distinct corruptions: quorum reached by the pair
+        insts = [_inst(1.0), _inst(7.0), _inst(1.0), _inst(8.0), _inst(9.0)]
+        r = check_set(insts, None, min_quorum=2)
+        assert r.canonical is not None and r.canonical.output == 1.0
+        assert len(r.invalid) == 3
+
+    def test_below_quorum_waits(self):
+        r = check_set([_inst(1.0)], None, min_quorum=2)
+        assert r.canonical is None
+
+    def test_single_quorum_trusted(self):
+        r = check_set([_inst(3.0)], None, min_quorum=1)
+        assert r.canonical is not None
+
+    def test_late_validate_against_canonical(self):
+        canonical = _inst(1.0)
+        late_ok = _inst(1.0)
+        late_bad = _inst(2.0)
+        assert validate_against_canonical(late_ok, canonical, None)
+        assert not validate_against_canonical(late_bad, canonical, None)
+        assert late_bad.validate_state == ValidateState.INVALID
+
+
+def make_store(min_quorum=2, max_err=3, max_succ=6):
+    reset_ids()
+    store = JobStore()
+    app = App(
+        name="a",
+        min_quorum=min_quorum,
+        init_ninstances=min_quorum,
+        max_error_instances=max_err,
+        max_success_instances=max_succ,
+    )
+    app.add_version(
+        AppVersion(
+            id=next_id("appver"),
+            app_name="a",
+            platform=Platform("windows", "x86_64"),
+            version_num=1,
+            plan_class=default_cpu_plan_class(),
+        )
+    )
+    store.add_app(app)
+    return store
+
+
+class TestTransitioner:
+    def test_initial_instances_created(self):
+        store = make_store()
+        job = store.submit_job(Job(id=next_id("job"), app_name="a", est_flop_count=1e9))
+        tr = Transitioner(store=store)
+        tr.tick(0.0)
+        assert len(store.job_instances(job.id)) == 2
+
+    def test_deadline_miss_creates_retry(self):
+        store = make_store()
+        job = store.submit_job(Job(id=next_id("job"), app_name="a", est_flop_count=1e9, delay_bound=100.0))
+        tr = Transitioner(store=store)
+        tr.tick(0.0)
+        insts = store.job_instances(job.id)
+        for i in insts:
+            i.state = InstanceState.IN_PROGRESS
+            i.deadline = 100.0
+        tr.tick(200.0)  # past deadline
+        insts = store.job_instances(job.id)
+        assert sum(1 for i in insts if i.outcome == InstanceOutcome.NO_REPLY) == 2
+        assert sum(1 for i in insts if i.state == InstanceState.UNSENT) == 2
+        assert tr.metrics.timeouts == 2
+
+    def test_quorum_validates_and_cancels_unsent(self):
+        store = make_store()
+        job = store.submit_job(Job(id=next_id("job"), app_name="a", est_flop_count=1e9))
+        tr = Transitioner(store=store)
+        tr.tick(0.0)
+        i1, i2 = store.job_instances(job.id)
+        for i in (i1, i2):
+            i.state = InstanceState.OVER
+            i.outcome = InstanceOutcome.SUCCESS
+            i.output = 42.0
+        job.transition_flag = True
+        tr.tick(1.0)
+        assert job.state == JobState.SUCCESS
+        assert job.canonical_instance_id in (i1.id, i2.id)
+
+    def test_disagreement_spawns_tiebreaker(self):
+        store = make_store()
+        job = store.submit_job(Job(id=next_id("job"), app_name="a", est_flop_count=1e9))
+        tr = Transitioner(store=store)
+        tr.tick(0.0)
+        i1, i2 = store.job_instances(job.id)
+        i1.state = i2.state = InstanceState.OVER
+        i1.outcome = i2.outcome = InstanceOutcome.SUCCESS
+        i1.output, i2.output = 1.0, 2.0
+        job.transition_flag = True
+        tr.tick(1.0)
+        assert job.state == JobState.ACTIVE
+        unsent = [
+            i for i in store.job_instances(job.id) if i.state == InstanceState.UNSENT
+        ]
+        assert len(unsent) == 1  # the tie-breaker
+
+    def test_error_limit_fails_job(self):
+        store = make_store(max_err=2)
+        job = store.submit_job(Job(id=next_id("job"), app_name="a", est_flop_count=1e9, max_error_instances=2))
+        tr = Transitioner(store=store)
+        for round_ in range(4):
+            tr.tick(float(round_))
+            for i in store.job_instances(job.id):
+                if i.state == InstanceState.UNSENT:
+                    i.state = InstanceState.OVER
+                    i.outcome = InstanceOutcome.CLIENT_ERROR
+            job.transition_flag = True
+        tr.tick(10.0)
+        assert job.state == JobState.FAILURE
+
+    def test_daemon_pause_accumulates_work(self):
+        """§5.1 fault tolerance: stopping the transitioner doesn't lose
+        anything — flags accumulate and are processed on resume."""
+        store = make_store()
+        jobs = [store.submit_job(Job(id=next_id("job"), app_name="a", est_flop_count=1e9)) for _ in range(5)]
+        tr = Transitioner(store=store)
+        # daemon "down": nothing processed
+        assert all(not store.job_instances(j.id) for j in jobs)
+        # daemon resumes
+        n = tr.tick(0.0)
+        assert n == 5
+        assert all(len(store.job_instances(j.id)) == 2 for j in jobs)
