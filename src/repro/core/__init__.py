@@ -12,6 +12,7 @@ Layout (paper section in parens):
   credit       — PFC credit + normalizations + cross-project (§7)
   allocation   — linear-bounded allocation model (§3.9)
   scheduler    — feeder, job cache, dispatch policy (§5.1, §6.4)
+  batch_dispatch — vectorized slots×hosts batch scoring engine (§5.1, §6.4)
   client       — WRR/EDF resource scheduling + work fetch (§6.1–6.2)
   server       — project-server facade w/ daemon set (§5.1)
   simulator    — EmBOINC-style virtual-time emulator (§9)
@@ -19,6 +20,7 @@ Layout (paper section in parens):
 from .adaptive import AdaptiveReplication
 from .allocation import LinearBoundedAllocator
 from .backoff import ExponentialBackoff
+from .batch_dispatch import BatchDispatchEngine
 from .client import Client, ClientJob, ClientPrefs, ClientResource, ProjectAttachment
 from .coordinator import AMReply, Coordinator, VettedProject
 from .credit import CreditSystem, peak_flop_count
@@ -26,6 +28,7 @@ from .estimation import RuntimeEstimator
 from .fsm import Transitioner
 from .keywords import KeywordPrefs, keyword_score
 from .scheduler import (
+    Candidate,
     CompletedResult,
     Feeder,
     ResourceRequest,
@@ -65,6 +68,8 @@ __all__ = [
     "App",
     "AppVersion",
     "Batch",
+    "BatchDispatchEngine",
+    "Candidate",
     "Client",
     "ClientJob",
     "ClientPrefs",

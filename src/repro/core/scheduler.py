@@ -14,6 +14,12 @@ weighted sum of keyword match, submitter allocation balance, skipped-before,
 locality, size-quantile match; fast checks = disk / deadline-feasibility /
 duplicate-in-reply; slow checks = one-instance-per-volunteer / job errored /
 HR class.
+
+Two dispatch engines implement the policy: the scalar per-request path here
+(``handle_request``, the reference oracle) and the vectorized batch path
+(``handle_batch`` + ``batch_dispatch.BatchDispatchEngine``), which scores
+all cache slots × a batch of hosts in fused NumPy passes. The two are
+result-identical (see ``tests/test_batch_dispatch.py``).
 """
 from __future__ import annotations
 
@@ -104,6 +110,26 @@ class ScheduleReply:
     jobs: List[DispatchedJob] = field(default_factory=list)
     delete_sticky: List[str] = field(default_factory=list)
     request_delay: float = 0.0
+
+
+@dataclass
+class Candidate:
+    """One scored (cache slot, job, app version) dispatch candidate.
+
+    Produced either by the scalar cache scan (``Scheduler._candidate_list``)
+    or by the vectorized batch engine (``batch_dispatch``). The batch engine
+    precomputes ``est_rt``/``scaled_rt`` in one fused pass; the scalar path
+    leaves them ``None`` and the dispatch tail computes them lazily.
+    """
+
+    score: float
+    slot: CacheSlot
+    job: Job
+    version: AppVersion
+    usage: Dict[ResourceType, float]
+    est_rt: Optional[float] = None
+    scaled_rt: Optional[float] = None
+    index: int = -1  # engine slot position (batch path only)
 
 
 # ---------------------------------------------------------------------------
@@ -217,6 +243,29 @@ class Scheduler:
     # ------------------------------------------------------------------
 
     def handle_request(self, req: ScheduleRequest, now: float) -> ScheduleReply:
+        return self._handle_one(req, now, engine=None)
+
+    def handle_batch(self, reqs: Sequence[ScheduleRequest], now: float) -> List[ScheduleReply]:
+        """Dispatch a batch of scheduler RPCs against one cache snapshot.
+
+        Semantically identical to N sequential :meth:`handle_request` calls
+        (same RNG consumption, same assignments, same metrics — asserted by
+        ``tests/test_batch_dispatch.py``), but candidate scoring runs as one
+        vectorized slots×host pass per request instead of the scalar
+        O(slots²) scan. Requests are processed in order; the shared dispatch
+        tail reports every slot mutation back to the engine as an event so
+        later requests in the batch observe taken slots, skip-count bumps,
+        and HR / homogeneous-app-version locks exactly as they would under
+        sequential execution.
+        """
+        from .batch_dispatch import BatchDispatchEngine  # deferred: avoids cycle
+
+        engine = BatchDispatchEngine(self.store, self.feeder)
+        return [self._handle_one(req, now, engine=engine) for req in reqs]
+
+    def _handle_one(self, req: ScheduleRequest, now: float, engine) -> ScheduleReply:
+        """One scheduler RPC; candidates come from the scalar cache scan or,
+        when ``engine`` is given, from the vectorized batch engine."""
         self.metrics.requests += 1
         host = self.store.hosts.get(req.host_id)
         reply = ScheduleReply()
@@ -236,9 +285,20 @@ class Scheduler:
             rreq = req.requests.get(rtype)
             if rreq is None or (rreq.req_runtime <= 0 and rreq.req_idle <= 0):
                 continue
+            if engine is None:
+                disk_left = self._dispatch_resource(
+                    host, req, rtype, rreq, reply, disk_left, now
+                )
+                continue
+            # same RNG draw as the scalar scan's random start point
+            start = self._rng.randrange(engine.n) if engine.n else 0
+            candidates = engine.candidates(self, host, req, rtype, start, now)
+            events: List[Tuple[str, Candidate]] = []
             disk_left = self._dispatch_resource(
-                host, req, rtype, rreq, reply, disk_left, now
+                host, req, rtype, rreq, reply, disk_left, now,
+                candidates=candidates, events=events,
             )
+            engine.apply(events)
         return reply
 
     # ------------------------------------------------------------------
@@ -282,29 +342,53 @@ class Scheduler:
         reply: ScheduleReply,
         disk_left: float,
         now: float,
+        candidates: Optional[Sequence[Candidate]] = None,
+        events: Optional[List[Tuple[str, Candidate]]] = None,
     ) -> float:
-        candidates = self._candidate_list(host, req, rtype, now)
+        """Dispatch tail shared by the scalar and batch paths.
+
+        ``candidates`` may be any iterable in descending-score order; when
+        omitted, the scalar cache scan produces it. ``events`` (batch path)
+        collects slot-state mutations for the engine's incremental arrays.
+        """
+        if candidates is None:
+            candidates = self._candidate_list(host, req, rtype, now)
         queue_dur = rreq.queue_dur
         req_runtime = rreq.req_runtime
         req_idle = rreq.req_idle
         sending_jobs = {d.job.id for d in reply.jobs}
 
-        for score, slot, job, version, usage in candidates:
+        for cand in candidates:
+            slot, job, version, usage = cand.slot, cand.job, cand.version, cand.usage
             inst = self.store.instances.get(slot.instance_id)
             # fast check (§6.4): still unsent? (another scheduler may have taken it)
             if inst is None or inst.state != InstanceState.UNSENT or slot.taken:
                 self.metrics.cache_misses += 1
+                if events is not None and slot.taken:
+                    events.append(("taken", cand))
                 continue
-            est_rt = self.estimator.est_runtime(job, host, version)
-            scaled_rt = self._scale_runtime(est_rt, host, rtype)
+            est_rt = (
+                cand.est_rt
+                if cand.est_rt is not None
+                else self.estimator.est_runtime(job, host, version)
+            )
+            scaled_rt = (
+                cand.scaled_rt
+                if cand.scaled_rt is not None
+                else self._scale_runtime(est_rt, host, rtype)
+            )
             if job.disk_bytes > disk_left:
                 self.metrics.fast_check_rejects += 1
                 slot.skipped += 1
+                if events is not None:
+                    events.append(("skip", cand))
                 continue
             if queue_dur + scaled_rt > job.delay_bound:
                 # probably won't make the deadline (§6.4 fast check b)
                 self.metrics.fast_check_rejects += 1
                 slot.skipped += 1
+                if events is not None:
+                    events.append(("skip", cand))
                 continue
             if job.id in sending_jobs:
                 self.metrics.fast_check_rejects += 1
@@ -316,11 +400,15 @@ class Scheduler:
                 slot.taken = False
                 self.metrics.slow_check_rejects += 1
                 slot.skipped += 1
+                if events is not None:
+                    events.append(("skip", cand))
                 continue
 
             self._dispatch(job, inst, host, version, now, reply, est_rt)
             sending_jobs.add(job.id)
             self.feeder.clear_slot(inst.id)
+            if events is not None:
+                events.append(("dispatch", cand))
             disk_left -= job.disk_bytes
             queue_dur += scaled_rt
             req_runtime -= scaled_rt
@@ -333,12 +421,12 @@ class Scheduler:
 
     def _candidate_list(
         self, host: Host, req: ScheduleRequest, rtype: ResourceType, now: float
-    ):
+    ) -> List[Candidate]:
         """Scan the job cache from a random start; score candidates (§6.4)."""
         slots = self.feeder.slots
         n = len(slots)
         start = self._rng.randrange(n) if n else 0
-        out = []
+        out: List[Candidate] = []
         seen_jobs = set()
         for k in range(n):
             slot = slots[(start + k) % n]
@@ -357,8 +445,8 @@ class Scheduler:
             if score is None:
                 continue
             seen_jobs.add(slot.job_id)
-            out.append((score, slot, job, version, usage))
-        out.sort(key=lambda t: -t[0])
+            out.append(Candidate(score=score, slot=slot, job=job, version=version, usage=usage))
+        out.sort(key=lambda c: -c.score)
         return out
 
     # ------------------------------------------------------------------

@@ -138,6 +138,28 @@ class ProjectServer:
         self._rr += 1
         return sched.handle_request(request, now)
 
+    def rpc_batch(self, requests: List[ScheduleRequest], now: float) -> List[ScheduleReply]:
+        """Coalesced scheduler RPCs: one vectorized batch-dispatch pass.
+
+        One scheduler instance serves the whole batch through
+        ``Scheduler.handle_batch`` (the shared-memory cache is snapshotted
+        into struct-of-arrays form once and scored vectorized per host),
+        result-identical to calling :meth:`rpc` per request in order. With
+        multiple scheduler instances the sequential path round-robins
+        requests across distinct RNG streams, so batching would change
+        assignments — fall back to per-request dispatch to keep the
+        identity.
+        """
+        if len(self.schedulers) > 1:
+            return [self.rpc(r, now) for r in requests]
+        for request in requests:
+            self._handle_trickles(request, now)
+        if not requests:
+            return []
+        sched = self.schedulers[self._rr % len(self.schedulers)]
+        self._rr += 1
+        return sched.handle_batch(requests, now)
+
     def _handle_trickles(self, request: ScheduleRequest, now: float) -> None:
         """Trickle-up messages are 'conveyed immediately to the server and
         handled by project-specific logic' (§3.5). The default handler

@@ -200,11 +200,19 @@ class GridSimulation:
         ground_truth: Optional[Callable[[int], Any]] = None,
         executor: Optional[Callable[[Any, Host], Any]] = None,
         corruptor: Optional[Callable[[Any, random.Random], Any]] = None,
+        coalesce_rpcs: bool = True,
     ) -> None:
         self.server = server
         self.specs: Dict[int, HostSpec] = {s.host.id: s for s in population}
         self.rng = random.Random(seed)
         self.server_tick_period = server_tick_period
+        # same-tick scheduler RPCs are coalesced into one vectorized
+        # batch-dispatch pass (server.rpc_batch). Dispatch decisions are
+        # identical to sequential RPCs; the simulation's own stochastic
+        # draws (result corruption, runtime noise) can interleave
+        # differently when a coalesced batch carries completion reports,
+        # because all requests are built before any reply is applied.
+        self.coalesce_rpcs = coalesce_rpcs
         self.ground_truth = ground_truth or (lambda job_id: float(job_id) * 1.5)
         # real-compute hook (grid runtime): executor(job, host) -> output
         self.executor = executor
@@ -278,7 +286,22 @@ class GridSimulation:
                 self.server.tick(t)
                 self._push(t + self.server_tick_period, _SERVER, 0)
             elif kind == _RPC:
-                self._handle_rpc(host_id, t)
+                batch = [host_id]
+                if self.coalesce_rpcs:
+                    # coalesce same-tick scheduler RPCs into one batch pass
+                    while (
+                        self._heap
+                        and self._heap[0][0] == t
+                        and self._heap[0][0] <= horizon
+                        and self._heap[0][2] == _RPC
+                    ):
+                        _, _, _, hid2 = heapq.heappop(self._heap)
+                        self._advance_running(hid2, t)
+                        batch.append(hid2)
+                if len(batch) == 1:
+                    self._handle_rpc(host_id, t)
+                else:
+                    self._handle_rpc_batch(batch, t)
             elif kind == _COMPLETE:
                 if self._event_gen.pop(seq, -1) == self._gen.get(host_id, 0):
                     self._handle_completions(host_id, t)
@@ -408,6 +431,33 @@ class GridSimulation:
         self._push(t + spec.rpc_poll, _RPC, host_id)
 
     def _do_rpc(self, host_id: int, t: float, force_report: bool = False) -> None:
+        request = self._build_request(host_id, t, force_report)
+        if request is None:
+            return
+        reply = self.server.rpc(request, t)
+        self._apply_reply(host_id, request, reply, t)
+
+    def _handle_rpc_batch(self, host_ids: List[int], t: float) -> None:
+        """Coalesced form of ``_handle_rpc``: build every host's request,
+        dispatch them in one ``rpc_batch`` call, then apply replies in the
+        same order the sequential loop would have."""
+        pending: List[Tuple[int, ScheduleRequest]] = []
+        for hid in host_ids:
+            spec = self.specs.get(hid)
+            if spec is None:
+                continue
+            if self.available.get(hid, False):
+                request = self._build_request(hid, t)
+                if request is not None:
+                    pending.append((hid, request))
+            self._push(t + spec.rpc_poll, _RPC, hid)
+        replies = self.server.rpc_batch([r for _, r in pending], t)
+        for (hid, request), reply in zip(pending, replies):
+            self._apply_reply(hid, request, reply, t)
+
+    def _build_request(
+        self, host_id: int, t: float, force_report: bool = False
+    ) -> Optional[ScheduleRequest]:
         spec = self.specs[host_id]
         client = self.clients[host_id]
         host = spec.host
@@ -418,7 +468,7 @@ class GridSimulation:
             reqs = fetch.requests
         want_report = force_report or client.should_report(self.server.name, t)
         if not reqs and not want_report:
-            return
+            return None
 
         completed: List[CompletedResult] = []
         if want_report:
@@ -434,7 +484,15 @@ class GridSimulation:
         self.metrics.rpcs += 1
         if reqs:
             self.metrics.rpcs_requesting_work += 1
-        reply = self.server.rpc(request, t)
+        return request
+
+    def _apply_reply(self, host_id: int, request: ScheduleRequest, reply, t: float) -> None:
+        spec = self.specs.get(host_id)
+        client = self.clients.get(host_id)
+        if spec is None or client is None:
+            return
+        host = spec.host
+        reqs = request.requests
         proj = client.projects.get(self.server.name)
         if reply.jobs:
             self.metrics.rpcs_with_work += 1
