@@ -1,9 +1,12 @@
 """Shared helpers for the benchmark harness."""
 from __future__ import annotations
 
+import json
+import os
 import sys
 import time
 from pathlib import Path
+from typing import Any, Dict, List, Optional
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
@@ -19,10 +22,30 @@ from repro.core import (  # noqa: E402
     reset_ids,
 )
 
+#: Every ``emit`` row of the current process, for machine-readable output
+#: (``BENCH_daemons.json``; see ``write_bench_json``).
+RESULTS: List[Dict[str, Any]] = []
+
 
 def emit(name: str, us_per_call: float, derived: str) -> None:
     """The harness output contract: ``name,us_per_call,derived`` CSV."""
     print(f"{name},{us_per_call:.3f},{derived}")
+    RESULTS.append({"name": name, "us_per_call": us_per_call, "derived": derived})
+
+
+def write_bench_json(path: Optional[str] = None, extra: Optional[Dict[str, Any]] = None) -> str:
+    """Dump every row emitted so far as JSON so CI can track the perf
+    trajectory. Default path: ``benchmarks/BENCH_daemons.json`` (override
+    with ``BENCH_JSON_PATH``)."""
+    path = path or os.environ.get(
+        "BENCH_JSON_PATH", str(Path(__file__).resolve().parent / "BENCH_daemons.json")
+    )
+    payload: Dict[str, Any] = {"schema": 1, "rows": RESULTS}
+    if extra:
+        payload.update(extra)
+    Path(path).write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"wrote {path}", file=sys.stderr)
+    return path
 
 
 def timer() -> float:

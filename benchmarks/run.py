@@ -4,6 +4,7 @@ Prints ``name,us_per_call,derived`` CSV (one line per measurement). Claims
 and their paper sections:
 
   bench_dispatch    S5.1/[17]  hundreds of dispatches per second; fast batch submit
+  bench_daemons     S5.1       indexed store: O(dirty) daemon passes at 1M-job backlogs
   bench_validation  S3.4       adaptive replication: overhead -> ~1, bounded errors
   bench_allocation  S3.9       linear-bounded model minimizes small-batch turnaround
   bench_scheduling  S6.1       EDF override avoids WRR deadline misses
@@ -11,6 +12,10 @@ and their paper sections:
   bench_credit      S7         device-neutral credit
   bench_kernels     (TPU adaptation) Pallas kernels vs oracles
   bench_grid_train  (TPU adaptation) end-to-end fault-tolerant grid training
+
+Every emitted row is also collected into machine-readable
+``benchmarks/BENCH_daemons.json`` (schema: {schema, rows, acceptance}) so CI
+can track the perf trajectory across PRs.
 """
 from __future__ import annotations
 
@@ -25,6 +30,7 @@ def main() -> None:
     from . import (
         bench_allocation,
         bench_credit,
+        bench_daemons,
         bench_dispatch,
         bench_grid_train,
         bench_kernels,
@@ -32,11 +38,13 @@ def main() -> None:
         bench_validation,
         bench_workfetch,
     )
+    from .common import write_bench_json
 
     print("name,us_per_call,derived")
     failures = 0
     for mod in (
         bench_dispatch,
+        bench_daemons,
         bench_validation,
         bench_allocation,
         bench_scheduling,
@@ -51,6 +59,9 @@ def main() -> None:
             failures += 1
             traceback.print_exc()
             print(f"{mod.__name__},0,FAILED")
+    # final write includes every module's rows (bench_daemons also writes
+    # early so a later module's crash can't lose the acceptance record)
+    write_bench_json(extra={"acceptance": getattr(bench_daemons.run, "acceptance", None)})
     if failures:
         sys.exit(1)
 

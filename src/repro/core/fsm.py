@@ -65,13 +65,15 @@ class Transitioner:
     def tick(self, now: float) -> int:
         """One daemon pass: handle deadline misses, then flagged jobs.
 
+        Both passes enumerate the store's indexes (deadline heap, pending
+        queue) so the cost is O(work to do), not O(table size); with
+        ``store.use_indexes=False`` they fall back to the oracle scans.
+
         Returns the number of jobs transitioned.
         """
         self._check_deadlines(now)
         n = 0
-        for job in list(self.store.jobs_with_flag()):
-            if job.id % self.n_instances != self.instance:
-                continue
+        for job in self.store.pending_transitions(self.instance, self.n_instances):
             job.transition_flag = False
             self._transition(job, now)
             n += 1
@@ -80,18 +82,22 @@ class Transitioner:
     # ------------------------------------------------------------------
 
     def _check_deadlines(self, now: float) -> None:
-        """Instances past deadline are assumed lost (§4)."""
-        for inst in self.store.instances.values():
-            if inst.state == InstanceState.IN_PROGRESS and now > inst.deadline > 0:
-                inst.state = InstanceState.OVER
-                inst.outcome = InstanceOutcome.NO_REPLY
-                self.metrics.timeouts += 1
-                job = self.store.jobs.get(inst.job_id)
-                if job is not None:
-                    job.transition_flag = True
-                if self.adaptive is not None and inst.host_id is not None \
-                        and inst.app_version_id is not None:
-                    self.adaptive.on_invalid(inst.host_id, inst.app_version_id)
+        """Instances past deadline are assumed lost (§4).
+
+        Deadline handling is sharded by ``job_id % n_instances`` like the
+        flagged-job pass — each transitioner instance mutates only its own
+        ID-space shard (§5.1).
+        """
+        for inst in self.store.expired_instances(now, self.instance, self.n_instances):
+            inst.state = InstanceState.OVER
+            inst.outcome = InstanceOutcome.NO_REPLY
+            self.metrics.timeouts += 1
+            job = self.store.jobs.get(inst.job_id)
+            if job is not None:
+                job.transition_flag = True
+            if self.adaptive is not None and inst.host_id is not None \
+                    and inst.app_version_id is not None:
+                self.adaptive.on_invalid(inst.host_id, inst.app_version_id)
 
     # ------------------------------------------------------------------
 

@@ -154,6 +154,9 @@ class Feeder:
     store: JobStore
     cache_size: int = 1024
     slots: List[Optional[CacheSlot]] = field(default_factory=list)
+    # instance_id -> slot position, so the dispatch tail's clear_slot is
+    # O(1) instead of a full cache scan per dispatched job
+    _slot_idx: Dict[int, int] = field(default_factory=dict, repr=False)
 
     def __post_init__(self) -> None:
         if not self.slots:
@@ -167,11 +170,12 @@ class Feeder:
             return 0
         per_app: Dict[str, List[JobInstance]] = {}
         for app_name in self.store.apps:
-            per_app[app_name] = [
-                inst
-                for inst in self.store.unsent_instances(app_name, limit=len(vacancies))
-                if inst.id not in in_cache
-            ]
+            # exclude in-cache ids *inside* the queue walk: with a backlog
+            # larger than the cache, the oldest UNSENT rows are exactly the
+            # cached ones, and filtering after the limit would starve refills
+            per_app[app_name] = self.store.unsent_instances(
+                app_name, limit=len(vacancies), exclude=in_cache
+            )
         filled = 0
         app_names = [a for a in per_app if per_app[a]]
         ai = 0
@@ -182,9 +186,13 @@ class Feeder:
                 break
             app_name = app_names[ai % len(app_names)]
             inst = per_app[app_name].pop(0)
+            old = self.slots[slot_idx]
+            if old is not None:
+                self._slot_idx.pop(old.instance_id, None)
             self.slots[slot_idx] = CacheSlot(
                 instance_id=inst.id, job_id=inst.job_id, app_name=app_name
             )
+            self._slot_idx[inst.id] = slot_idx
             in_cache.add(inst.id)
             filled += 1
             ai += 1
@@ -195,10 +203,11 @@ class Feeder:
         return inst is None or inst.state != InstanceState.UNSENT
 
     def clear_slot(self, instance_id: int) -> None:
-        for i, s in enumerate(self.slots):
+        i = self._slot_idx.pop(instance_id, None)
+        if i is not None:
+            s = self.slots[i]
             if s is not None and s.instance_id == instance_id:
                 self.slots[i] = None
-                return
 
 
 # ---------------------------------------------------------------------------

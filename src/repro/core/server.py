@@ -21,7 +21,7 @@ from .estimation import RuntimeEstimator
 from .fsm import Transitioner
 from .scheduler import Feeder, Scheduler, ScheduleReply, ScheduleRequest, TrickleUp
 from .store import JobStore
-from .types import App, AppVersion, Batch, Host, Job, JobState, next_id
+from .types import App, AppVersion, Batch, Host, Job, next_id
 
 AssimilatorFn = Callable[[Job, Any], None]
 
@@ -206,7 +206,7 @@ class ProjectServer:
 
     def assimilate(self, now: float) -> int:
         n = 0
-        for job in self.store.jobs_to_assimilate():
+        for job in self.store.pending_assimilation():
             handler = self.assimilators.get(job.app_name)
             output = None
             if job.canonical_instance_id is not None:
@@ -222,8 +222,9 @@ class ProjectServer:
 
     def delete_files(self, now: float) -> int:
         n = 0
-        for job in self.store.jobs_to_delete_files():
-            # retain canonical output until all instances resolved (§4)
+        for job in self.store.pending_file_deletion():
+            # retain canonical output until all instances resolved (§4);
+            # jobs that fail this check simply stay in the pending queue
             if any(i.is_outstanding() for i in self.store.job_instances(job.id)):
                 continue
             job.files_deleted = True
@@ -231,15 +232,25 @@ class ProjectServer:
         return n
 
     def purge(self, now: float) -> int:
+        # the store pops only rows past the retention window (§4): jobs
+        # still inside it stay heaped and cost nothing per tick
         n = 0
-        for job in list(self.store.jobs_to_purge()):
-            if now - job.created_time < self.purge_delay:
-                continue
+        for job in self.store.purgeable_jobs(now - self.purge_delay):
             self.store.purge_job(job)
             n += 1
         return n
 
     def _update_batches(self, now: float) -> None:
+        if self.store.use_indexes:
+            # O(newly completed): the store flags a batch the moment its
+            # last job reaches a terminal state
+            for bid in self.store.drain_completed_batches():
+                b = self.store.batches.get(bid)
+                # re-check doneness (O(1) counter probe): the batch may have
+                # reopened since it was flagged
+                if b is not None and b.completed_time is None and self.store.batch_done(bid):
+                    b.completed_time = now
+            return
         for b in self.store.batches.values():
             if b.completed_time is None and b.job_ids and self.store.batch_done(b.id):
                 b.completed_time = now
@@ -249,17 +260,4 @@ class ProjectServer:
     # ------------------------------------------------------------------
 
     def counts(self) -> Dict[str, int]:
-        from .types import InstanceState
-
-        jobs = self.store.jobs.values()
-        return {
-            "jobs_active": sum(1 for j in jobs if j.state == JobState.ACTIVE),
-            "jobs_success": sum(1 for j in self.store.jobs.values() if j.state == JobState.SUCCESS),
-            "jobs_failure": sum(1 for j in self.store.jobs.values() if j.state == JobState.FAILURE),
-            "instances_unsent": sum(
-                1 for i in self.store.instances.values() if i.state == InstanceState.UNSENT
-            ),
-            "instances_in_progress": sum(
-                1 for i in self.store.instances.values() if i.state == InstanceState.IN_PROGRESS
-            ),
-        }
+        return self.store.status_counts()

@@ -229,6 +229,7 @@ class GridSimulation:
         self._last_update: Dict[int, float] = {}
         self._instance_meta: Dict[int, Tuple[int, float]] = {}  # iid -> (version_id, actual_total)
         self._wrong_outputs: Dict[int, bool] = {}  # iid -> output was wrong
+        self._completed_ok = 0  # instances that ran to completion (SUCCESS reports)
         self._callbacks: Dict[int, Callable[[float], None]] = {}
         self._capacity_accounted = 0.0
 
@@ -554,6 +555,7 @@ class GridSimulation:
         else:
             output = truth
         self._wrong_outputs[cj.instance_id] = wrong
+        self._completed_ok += 1
         pfc = peak_flop_count(cj.runtime, cj.usage, spec.host)
         return CompletedResult(
             instance_id=cj.instance_id,
@@ -585,6 +587,9 @@ class GridSimulation:
                 self.metrics.wrong_accepted += 1
             else:
                 self.metrics.correct_accepted += 1
-        self.metrics.completed_instances = len(
-            [v for v in self._wrong_outputs]
-        )
+        # explicit counter of instances that ran to completion — CLIENT_ERROR
+        # crashes are reported but never completed, so they don't count
+        self.metrics.completed_instances = self._completed_ok
+        # the audit doubles as the store's index/scan consistency check
+        if store.use_indexes:
+            store.check_invariants()

@@ -6,13 +6,35 @@ between scheduler instances and daemons. Daemons communicate *only* through
 this store (flags on rows), which is what makes the multi-daemon
 architecture fault-tolerant: a stopped daemon's work accumulates here.
 
+**Indexes (§5.1).** Real BOINC daemons never table-scan: they enumerate
+flagged records through DB indexes (``WHERE transition_time < now``). This
+store reproduces that with structures maintained *at mutation time* (rows
+notify the store on field assignment, see ``types.IndexObserved``):
+
+  * per-state ID sets for jobs and instances (``counts`` in O(1));
+  * per-daemon pending queues — ``transition_pending``,
+    ``assimilate_pending``, ``delete_pending``, ``purge_pending`` and
+    ``batch_done_pending`` — so a daemon pass is O(work to do), not
+    O(table size);
+  * a lazy min-heap over IN_PROGRESS instance deadlines, so the
+    transitioner's deadline pass pops only expired entries;
+  * per-job ``(host, volunteer)`` assignment sets, making the
+    one-instance-per-volunteer "slow check" (§6.4) O(1);
+  * per-batch open-job counters replacing the all-jobs ``batch_done`` scan.
+
+The original scan queries (``jobs_with_flag`` & co.) are kept as the
+debug/oracle path: ``use_indexes=False`` routes every daemon query through
+them, and :meth:`check_invariants` asserts index ↔ scan agreement.
+
 ID-space sharding (§5.1): every daemon iterates ``shard(items, i, n)`` —
 instance ``i`` of ``n`` handles rows with ``id % n == i``.
 """
 from __future__ import annotations
 
+import heapq
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, Iterable, Iterator, List, Optional, Tuple
+from typing import Deque, Dict, Iterable, Iterator, List, Optional, Set, Tuple
 
 from .types import (
     App,
@@ -35,6 +57,9 @@ def shard(ids: Iterable[int], instance: int, n_instances: int) -> Iterator[int]:
             yield i
 
 
+_TERMINAL = (JobState.SUCCESS, JobState.FAILURE)
+
+
 @dataclass
 class JobStore:
     apps: Dict[str, App] = field(default_factory=dict)
@@ -44,10 +69,44 @@ class JobStore:
     instances: Dict[int, JobInstance] = field(default_factory=dict)
     batches: Dict[int, Batch] = field(default_factory=dict)
     _by_job: Dict[int, List[int]] = field(default_factory=dict)
-    # instances awaiting dispatch, FIFO per app
-    _unsent: Dict[str, List[int]] = field(default_factory=dict)
+    # instances awaiting dispatch, FIFO per app; entries are dropped lazily
+    # (from the head, or skipped mid-queue) once no longer UNSENT.
+    # _unsent_ids mirrors queue membership exactly so re-enqueues (a row
+    # returning to UNSENT while its stale entry is still mid-queue) can't
+    # create duplicates
+    _unsent: Dict[str, Deque[int]] = field(default_factory=dict)
+    _unsent_ids: Dict[str, Set[int]] = field(default_factory=dict)
     # monotonically increasing DB "row version" for cheap change detection
     mutations: int = 0
+    # daemon queries go through the maintained indexes; False selects the
+    # original scan implementations (the oracle used for parity tests)
+    use_indexes: bool = True
+
+    # ---- maintained indexes (§5.1 "DB index" analogy) ----
+    _jobs_by_state: Dict[JobState, Set[int]] = field(default_factory=dict)
+    _insts_by_state: Dict[InstanceState, Set[int]] = field(default_factory=dict)
+    transition_pending: Set[int] = field(default_factory=set)
+    assimilate_pending: Set[int] = field(default_factory=set)
+    delete_pending: Set[int] = field(default_factory=set)
+    purge_pending: Set[int] = field(default_factory=set)
+    batch_done_pending: Set[int] = field(default_factory=set)
+    _batch_open: Dict[int, int] = field(default_factory=dict)
+    # (deadline, instance_id) heap over IN_PROGRESS instances; entries are
+    # validated on pop (state / deadline may have changed since push)
+    _deadline_heap: List[Tuple[float, int]] = field(default_factory=list)
+    # (created_time, job_id) heap over purge-pending jobs, so a purger with
+    # a retention window (purge_delay, §4) pops only eligible rows instead
+    # of re-visiting every completed-but-retained job each tick
+    _purge_heap: List[Tuple[float, int]] = field(default_factory=list)
+    # job_id -> host ids / volunteer ids ever assigned an instance
+    _job_hosts: Dict[int, Set[int]] = field(default_factory=dict)
+    _job_vols: Dict[int, Set[int]] = field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        for s in JobState:
+            self._jobs_by_state.setdefault(s, set())
+        for s in InstanceState:
+            self._insts_by_state.setdefault(s, set())
 
     # ---- registration ----
 
@@ -77,13 +136,21 @@ class JobStore:
 
     def submit_job(self, job: Job) -> Job:
         assert job.app_name in self.apps, f"unknown app {job.app_name}"
+        job.transition_flag = True
         self.jobs[job.id] = job
         self._by_job.setdefault(job.id, [])
-        job.transition_flag = True
+        self._jobs_by_state[job.state].add(job.id)
         if job.batch_id:
             self.batches.setdefault(
                 job.batch_id, Batch(id=job.batch_id, submitter=job.submitter)
             ).job_ids.append(job.id)
+            if job.state not in _TERMINAL and job.state != JobState.PURGED:
+                self._batch_open[job.batch_id] = self._batch_open.get(job.batch_id, 0) + 1
+                # the batch reopened: a momentarily-complete batch must not
+                # keep its done flag
+                self.batch_done_pending.discard(job.batch_id)
+        object.__setattr__(job, "_store", self)  # begin observing mutations
+        self._reindex_job(job)
         self.mutations += 1
         return job
 
@@ -91,42 +158,75 @@ class JobStore:
         inst = JobInstance(id=next_id("instance"), job_id=job.id)
         self.instances[inst.id] = inst
         self._by_job[job.id].append(inst.id)
-        self._unsent.setdefault(job.app_name, []).append(inst.id)
+        self._insts_by_state[inst.state].add(inst.id)
+        self._unsent.setdefault(job.app_name, deque()).append(inst.id)
+        self._unsent_ids.setdefault(job.app_name, set()).add(inst.id)
+        object.__setattr__(inst, "_store", self)
         self.mutations += 1
         return inst
 
     def job_instances(self, job_id: int) -> List[JobInstance]:
         return [self.instances[i] for i in self._by_job.get(job_id, [])]
 
-    def unsent_instances(self, app_name: str, limit: int = 0) -> List[JobInstance]:
-        ids = self._unsent.get(app_name, [])
-        out: List[JobInstance] = []
-        kept: List[int] = []
-        for iid in ids:
-            inst = self.instances.get(iid)
-            if inst is None or inst.state != InstanceState.UNSENT:
-                continue  # lazily drop stale queue entries
-            kept.append(iid)
-            if not limit or len(out) < limit:
-                out.append(inst)
-        self._unsent[app_name] = kept
-        return out
+    def unsent_instances(
+        self,
+        app_name: str,
+        limit: int = 0,
+        exclude: Optional[Set[int]] = None,
+    ) -> List[JobInstance]:
+        """First ``limit`` dispatchable instances of ``app_name``, FIFO.
 
-    def requeue_unsent(self, inst: JobInstance) -> None:
-        """Return an instance to the dispatch queue (feeder refill path)."""
-        job = self.jobs[inst.job_id]
-        self._unsent.setdefault(job.app_name, []).append(inst.id)
+        ``exclude`` (the feeder passes its in-cache set) skips instance ids
+        without counting them toward ``limit`` — otherwise a backlog larger
+        than the cache would keep returning the already-cached queue head
+        and the feeder could never refill past it.
+
+        O(limit + skipped + dropped): dead entries are popped from the
+        queue head; dead entries deeper in the queue are skipped (and
+        dropped once they surface at the head) instead of rebuilding the
+        whole list per call.
+        """
+        q = self._unsent.get(app_name)
+        if not q:
+            return []
+        insts = self.instances
+        ids = self._unsent_ids.get(app_name, set())
+        while q:  # compact the head so the queue cannot grow unboundedly
+            inst = insts.get(q[0])
+            if inst is not None and inst.state == InstanceState.UNSENT:
+                break
+            ids.discard(q.popleft())
+        out: List[JobInstance] = []
+        for iid in q:
+            if exclude is not None and iid in exclude:
+                continue
+            inst = insts.get(iid)
+            if inst is None or inst.state != InstanceState.UNSENT:
+                continue
+            out.append(inst)
+            if limit and len(out) >= limit:
+                break
+        return out
 
     def host_has_instance_of_job(self, host_id: int, job_id: int) -> bool:
         """One-instance-per-host rule ('slow check', §6.4) — BOINC actually
-        enforces one per *volunteer*; we key on host's volunteer."""
+        enforces one per *volunteer*; we key on the volunteer of record
+        captured at dispatch time."""
+        if self.use_indexes:
+            if host_id in self._job_hosts.get(job_id, ()):
+                return True
+            host = self.hosts.get(host_id)
+            return host is not None and host.volunteer_id in self._job_vols.get(job_id, ())
+        # oracle path: resolve the volunteer via the hosts table at query
+        # time (the seed semantics), independent of the observer-captured
+        # assignment sets it is used to cross-check
         host = self.hosts.get(host_id)
         vol = host.volunteer_id if host else None
         for inst in self.job_instances(job_id):
             if inst.host_id is None:
                 continue
             h = self.hosts.get(inst.host_id)
-            if inst.host_id == host_id or (vol is not None and h and h.volunteer_id == vol):
+            if inst.host_id == host_id or (vol is not None and h is not None and h.volunteer_id == vol):
                 return True
         return False
 
@@ -136,12 +236,137 @@ class JobStore:
         b = self.batches.get(batch_id)
         if b is None:
             return False
+        if self.use_indexes:
+            return bool(b.job_ids) and self._batch_open.get(batch_id, 0) <= 0
         return all(
-            self.jobs[j].state in (JobState.SUCCESS, JobState.FAILURE)
-            for j in b.job_ids
+            j not in self.jobs or self.jobs[j].state in _TERMINAL
+            for j in b.job_ids  # rows already purged count as done (§4)
         )
 
+    def drain_completed_batches(self) -> List[int]:
+        """Batches whose last job just reached a terminal state, ascending."""
+        out = sorted(self.batch_done_pending)
+        self.batch_done_pending.clear()
+        return out
+
     # ---- queries for daemons ----
+    #
+    # ``pending_*`` are what the daemons consume: the indexed path reads the
+    # maintained queues (O(pending)); the oracle path falls back to the
+    # original full scans. Both return ascending job id for determinism.
+
+    def pending_transitions(self, instance: int = 0, n_instances: int = 1) -> List[Job]:
+        if self.use_indexes:
+            ids = self.transition_pending
+        else:
+            ids = (j.id for j in self.jobs_with_flag())
+        return [self.jobs[j] for j in sorted(shard(ids, instance, n_instances))]
+
+    def pending_assimilation(self) -> List[Job]:
+        source = self.assimilate_pending if self.use_indexes else (
+            j.id for j in self.jobs_to_assimilate()
+        )
+        return [self.jobs[j] for j in sorted(source)]
+
+    def pending_file_deletion(self) -> List[Job]:
+        source = self.delete_pending if self.use_indexes else (
+            j.id for j in self.jobs_to_delete_files()
+        )
+        return [self.jobs[j] for j in sorted(source)]
+
+    def purgeable_jobs(self, cutoff: float) -> List[Job]:
+        """Purge-pending jobs with ``created_time <= cutoff``, ascending id.
+
+        Indexed path: pops the purge heap down to ``cutoff`` — jobs inside
+        the retention window stay heaped and cost nothing per tick. Popped
+        jobs are expected to be purged by the caller (the purger daemon);
+        stale entries are dropped on pop.
+        """
+        if not self.use_indexes:
+            return sorted(
+                (j for j in self.jobs_to_purge() if j.created_time <= cutoff),
+                key=lambda j: j.id,
+            )
+        out: List[Job] = []
+        h = self._purge_heap
+        while h and h[0][0] <= cutoff:
+            created, jid = heapq.heappop(h)
+            job = self.jobs.get(jid)
+            if job is None or jid not in self.purge_pending or job.created_time != created:
+                continue  # stale entry
+            out.append(job)
+        out.sort(key=lambda j: j.id)
+        return out
+
+    def expired_instances(self, now: float, instance: int = 0, n_instances: int = 1) -> List[JobInstance]:
+        """IN_PROGRESS instances past deadline, for one daemon shard (§5.1).
+
+        Indexed path: pop the deadline heap down to ``now`` — O(expired log
+        heap) instead of a full instance-table scan. Entries belonging to
+        other shards are pushed back for their transitioner instance.
+        """
+        if not self.use_indexes:
+            return [
+                inst
+                for inst in self.instances.values()
+                if inst.state == InstanceState.IN_PROGRESS
+                and now > inst.deadline > 0
+                and inst.job_id % n_instances == instance
+            ]
+        h = self._deadline_heap
+        in_progress = self._insts_by_state[InstanceState.IN_PROGRESS]
+        if len(h) > 1024 and len(h) > 4 * len(in_progress):
+            # mostly-stale heap (instances completed before their deadline):
+            # rebuild from live rows so pops stay O(expired)
+            h[:] = [
+                (inst.deadline, iid)
+                for iid in in_progress
+                if (inst := self.instances[iid]).deadline > 0
+            ]
+            heapq.heapify(h)
+        out: List[JobInstance] = []
+        other_shards: List[Tuple[float, int]] = []
+        while h and h[0][0] < now:
+            deadline, iid = heapq.heappop(h)
+            inst = self.instances.get(iid)
+            if (
+                inst is None
+                or inst.state != InstanceState.IN_PROGRESS
+                or inst.deadline != deadline
+                or deadline <= 0
+            ):
+                continue  # stale entry
+            if inst.job_id % n_instances != instance:
+                other_shards.append((deadline, iid))
+                continue
+            out.append(inst)
+        for entry in other_shards:
+            heapq.heappush(h, entry)
+        return out
+
+    def status_counts(self) -> Dict[str, int]:
+        if self.use_indexes:
+            return {
+                "jobs_active": len(self._jobs_by_state[JobState.ACTIVE]),
+                "jobs_success": len(self._jobs_by_state[JobState.SUCCESS]),
+                "jobs_failure": len(self._jobs_by_state[JobState.FAILURE]),
+                "instances_unsent": len(self._insts_by_state[InstanceState.UNSENT]),
+                "instances_in_progress": len(self._insts_by_state[InstanceState.IN_PROGRESS]),
+            }
+        jobs = self.jobs.values()
+        return {
+            "jobs_active": sum(1 for j in jobs if j.state == JobState.ACTIVE),
+            "jobs_success": sum(1 for j in self.jobs.values() if j.state == JobState.SUCCESS),
+            "jobs_failure": sum(1 for j in self.jobs.values() if j.state == JobState.FAILURE),
+            "instances_unsent": sum(
+                1 for i in self.instances.values() if i.state == InstanceState.UNSENT
+            ),
+            "instances_in_progress": sum(
+                1 for i in self.instances.values() if i.state == InstanceState.IN_PROGRESS
+            ),
+        }
+
+    # ---- scan queries (debug / oracle path) ----
 
     def jobs_with_flag(self) -> List[Job]:
         return [j for j in self.jobs.values() if j.transition_flag and j.state == JobState.ACTIVE]
@@ -150,7 +375,7 @@ class JobStore:
         return [
             j
             for j in self.jobs.values()
-            if j.state in (JobState.SUCCESS, JobState.FAILURE) and not j.assimilated
+            if j.state in _TERMINAL and not j.assimilated
         ]
 
     def jobs_to_delete_files(self) -> List[Job]:
@@ -170,9 +395,215 @@ class JobStore:
     def purge_job(self, job: Job) -> None:
         """Remove completed rows; the DB is a cache of jobs in progress, not
         an archive (§4)."""
-        for iid in self._by_job.get(job.id, []):
-            self.instances.pop(iid, None)
-        self._by_job.pop(job.id, None)
+        jid = job.id
+        for iid in self._by_job.get(jid, []):
+            inst = self.instances.pop(iid, None)
+            if inst is not None:
+                self._insts_by_state[inst.state].discard(iid)
+                object.__setattr__(inst, "_store", None)
+        self._by_job.pop(jid, None)
+        self._job_hosts.pop(jid, None)
+        self._job_vols.pop(jid, None)
         job.state = JobState.PURGED
-        self.jobs.pop(job.id, None)
+        self.jobs.pop(jid, None)
+        self._jobs_by_state[JobState.PURGED].discard(jid)
+        for pending in (
+            self.transition_pending,
+            self.assimilate_pending,
+            self.delete_pending,
+            self.purge_pending,
+        ):
+            pending.discard(jid)
+        object.__setattr__(job, "_store", None)
         self.mutations += 1
+
+    # ------------------------------------------------------------------
+    # index maintenance: rows notify us on tracked-field assignment
+    # (types.IndexObserved) — the moral equivalent of index updates
+    # riding along with every UPDATE in the real schema (§5.1)
+    # ------------------------------------------------------------------
+
+    def _on_field_change(self, row, name: str, old, new) -> None:
+        if isinstance(row, Job):
+            self._job_changed(row, name, old, new)
+        else:
+            self._instance_changed(row, name, old, new)
+
+    def _job_changed(self, job: Job, name: str, old, new) -> None:
+        if name == "state":
+            self._jobs_by_state[old].discard(job.id)
+            self._jobs_by_state[new].add(job.id)
+            if job.batch_id:
+                was_open = old not in _TERMINAL and old != JobState.PURGED
+                is_open = new not in _TERMINAL and new != JobState.PURGED
+                if was_open and not is_open:
+                    left = self._batch_open.get(job.batch_id, 0) - 1
+                    self._batch_open[job.batch_id] = left
+                    if left <= 0:
+                        b = self.batches.get(job.batch_id)
+                        if b is not None and b.job_ids and b.completed_time is None:
+                            self.batch_done_pending.add(job.batch_id)
+                elif is_open and not was_open:
+                    self._batch_open[job.batch_id] = self._batch_open.get(job.batch_id, 0) + 1
+                    self.batch_done_pending.discard(job.batch_id)
+        self._reindex_job(job)
+
+    def _reindex_job(self, job: Job) -> None:
+        jid = job.id
+        _set_membership(
+            self.transition_pending, jid,
+            job.transition_flag and job.state == JobState.ACTIVE,
+        )
+        _set_membership(
+            self.assimilate_pending, jid,
+            job.state in _TERMINAL and not job.assimilated,
+        )
+        _set_membership(
+            self.delete_pending, jid,
+            job.assimilated and not job.files_deleted,
+        )
+        want_purge = job.assimilated and job.files_deleted and job.state != JobState.PURGED
+        if want_purge and jid not in self.purge_pending:
+            heapq.heappush(self._purge_heap, (job.created_time, jid))
+        _set_membership(self.purge_pending, jid, want_purge)
+
+    def _instance_changed(self, inst: JobInstance, name: str, old, new) -> None:
+        if name == "state":
+            self._insts_by_state[old].discard(inst.id)
+            self._insts_by_state[new].add(inst.id)
+            if new == InstanceState.IN_PROGRESS and inst.deadline > 0:
+                heapq.heappush(self._deadline_heap, (inst.deadline, inst.id))
+            elif new == InstanceState.UNSENT:
+                # a row returned to the dispatchable pool re-enters the
+                # queue — unless its previous entry is still queued (it
+                # simply becomes live again)
+                job = self.jobs.get(inst.job_id)
+                if job is not None:
+                    queued = self._unsent_ids.setdefault(job.app_name, set())
+                    if inst.id not in queued:
+                        self._unsent.setdefault(job.app_name, deque()).append(inst.id)
+                        queued.add(inst.id)
+        elif name == "deadline":
+            if inst.state == InstanceState.IN_PROGRESS and new > 0:
+                heapq.heappush(self._deadline_heap, (new, inst.id))
+        elif name == "host_id" and new is not None:
+            self._job_hosts.setdefault(inst.job_id, set()).add(new)
+            host = self.hosts.get(new)
+            if host is not None:
+                inst.volunteer_id = host.volunteer_id
+                self._job_vols.setdefault(inst.job_id, set()).add(host.volunteer_id)
+
+    # ------------------------------------------------------------------
+    # invariant checker: index ↔ scan agreement
+    # ------------------------------------------------------------------
+
+    def check_invariants(self) -> None:
+        """Assert every maintained index agrees with a full-table scan.
+
+        This is the oracle tying the O(dirty) daemon path back to the seed
+        semantics; tests and the simulator audit path call it.
+        """
+        problems: List[str] = []
+
+        expect_jobs: Dict[JobState, Set[int]] = {s: set() for s in JobState}
+        for j in self.jobs.values():
+            expect_jobs[j.state].add(j.id)
+        for s in JobState:
+            if self._jobs_by_state[s] != expect_jobs[s]:
+                problems.append(
+                    f"jobs_by_state[{s}] diverged: "
+                    f"extra={sorted(self._jobs_by_state[s] - expect_jobs[s])[:5]} "
+                    f"missing={sorted(expect_jobs[s] - self._jobs_by_state[s])[:5]}"
+                )
+
+        expect_insts: Dict[InstanceState, Set[int]] = {s: set() for s in InstanceState}
+        for i in self.instances.values():
+            expect_insts[i.state].add(i.id)
+        for s in InstanceState:
+            if self._insts_by_state[s] != expect_insts[s]:
+                problems.append(f"insts_by_state[{s}] diverged")
+
+        scans = {
+            "transition_pending": (self.transition_pending, self.jobs_with_flag()),
+            "assimilate_pending": (self.assimilate_pending, self.jobs_to_assimilate()),
+            "delete_pending": (self.delete_pending, self.jobs_to_delete_files()),
+            "purge_pending": (self.purge_pending, self.jobs_to_purge()),
+        }
+        for label, (idx, scan) in scans.items():
+            scan_ids = {j.id for j in scan}
+            if idx != scan_ids:
+                problems.append(
+                    f"{label} diverged: extra={sorted(idx - scan_ids)[:5]} "
+                    f"missing={sorted(scan_ids - idx)[:5]}"
+                )
+
+        for bid, b in self.batches.items():
+            expect_open = sum(
+                1
+                for j in b.job_ids
+                if (jb := self.jobs.get(j)) is not None and jb.state == JobState.ACTIVE
+            )
+            if self._batch_open.get(bid, 0) != expect_open:
+                problems.append(
+                    f"batch {bid} open-count {self._batch_open.get(bid, 0)} != scan {expect_open}"
+                )
+        for bid in self.batch_done_pending:
+            if self._batch_open.get(bid, 0) > 0:
+                problems.append(f"batch {bid} flagged done with open jobs")
+
+        live_deadlines = {
+            (inst.deadline, iid)
+            for iid, inst in self.instances.items()
+            if inst.state == InstanceState.IN_PROGRESS and inst.deadline > 0
+        }
+        missing = live_deadlines - set(self._deadline_heap)
+        if missing:
+            problems.append(f"deadline heap missing live entries: {sorted(missing)[:5]}")
+
+        live_purge = {
+            (self.jobs[jid].created_time, jid)
+            for jid in self.purge_pending
+            if jid in self.jobs
+        }
+        missing_purge = live_purge - set(self._purge_heap)
+        if missing_purge:
+            problems.append(f"purge heap missing live entries: {sorted(missing_purge)[:5]}")
+
+        queued: Set[int] = set()
+        for app_name, q in self._unsent.items():
+            entries = set(q)
+            if len(entries) != len(q):
+                problems.append(f"dispatch queue for {app_name!r} has duplicate entries")
+            if entries != self._unsent_ids.get(app_name, set()):
+                problems.append(f"dispatch-queue mirror set for {app_name!r} diverged")
+            queued.update(entries)
+        for iid in self._insts_by_state[InstanceState.UNSENT]:
+            if iid not in queued:
+                problems.append(f"UNSENT instance {iid} not in any dispatch queue")
+                break
+
+        expect_hosts: Dict[int, Set[int]] = {}
+        expect_vols: Dict[int, Set[int]] = {}
+        for inst in self.instances.values():
+            if inst.host_id is not None:
+                expect_hosts.setdefault(inst.job_id, set()).add(inst.host_id)
+            if inst.volunteer_id is not None:
+                expect_vols.setdefault(inst.job_id, set()).add(inst.volunteer_id)
+        for label, idx, expect in (
+            ("job_hosts", self._job_hosts, expect_hosts),
+            ("job_vols", self._job_vols, expect_vols),
+        ):
+            for jid, members in expect.items():
+                if not members <= idx.get(jid, set()):
+                    problems.append(f"{label}[{jid}] missing assignments")
+                    break
+
+        if problems:
+            raise AssertionError("store index invariants violated:\n  " + "\n  ".join(problems))
+
+
+def _set_membership(s: Set[int], item: int, member: bool) -> None:
+    if member:
+        s.add(item)
+    else:
+        s.discard(item)

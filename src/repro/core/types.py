@@ -248,6 +248,34 @@ class App:
 # ---------------------------------------------------------------------------
 
 
+class IndexObserved:
+    """Mixin: notify the owning :class:`~repro.core.store.JobStore` when an
+    indexed field is assigned.
+
+    The store's §5.1 "DB indexes" (state sets, pending queues, the deadline
+    heap) are maintained *at mutation time*. Concurrent daemons — and tests —
+    mutate rows by plain attribute assignment (``inst.state = ...``,
+    ``job.transition_flag = True``), exactly like UPDATEs against the real
+    MySQL schema, so the hook lives here rather than in store methods: any
+    assignment to a field named in ``_TRACKED`` is forwarded to
+    ``store._on_field_change``. Rows not attached to a store (``_store``
+    unset) behave as plain dataclasses.
+    """
+
+    _TRACKED = frozenset()
+
+    def __setattr__(self, name: str, value: Any) -> None:
+        if name in self._TRACKED:
+            store = self.__dict__.get("_store")
+            if store is not None:
+                old = self.__dict__.get(name)
+                object.__setattr__(self, name, value)
+                if old != value:
+                    store._on_field_change(self, name, old, value)
+                return
+        object.__setattr__(self, name, value)
+
+
 class JobState(enum.Enum):
     ACTIVE = "active"  # instances outstanding or validation pending
     SUCCESS = "success"  # canonical instance found & assimilated
@@ -279,8 +307,10 @@ class ValidateState(enum.Enum):
 
 
 @dataclass
-class Job:
+class Job(IndexObserved):
     """A workunit (§3.3). Instances of it are dispatched to hosts."""
+
+    _TRACKED = frozenset({"state", "transition_flag", "assimilated", "files_deleted"})
 
     id: int
     app_name: str
@@ -317,8 +347,10 @@ class Job:
 
 
 @dataclass
-class JobInstance:
+class JobInstance(IndexObserved):
     """A job instance / result (§3.3, §4)."""
+
+    _TRACKED = frozenset({"state", "deadline", "host_id"})
 
     id: int
     job_id: int
@@ -326,6 +358,9 @@ class JobInstance:
     outcome: InstanceOutcome = InstanceOutcome.INIT
     validate_state: ValidateState = ValidateState.INIT
     host_id: Optional[int] = None
+    # volunteer of record, captured by the store when host_id is assigned:
+    # the one-instance-per-volunteer rule (§6.4) keys on this
+    volunteer_id: Optional[int] = None
     app_version_id: Optional[int] = None
     sent_time: float = 0.0
     deadline: float = 0.0

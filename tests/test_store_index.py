@@ -1,0 +1,405 @@
+"""Indexed job store (§5.1 "DB index" analogy): parity with the scan
+oracle, pending-queue fault tolerance, sharded deadline handling, and the
+index ↔ scan invariant checker."""
+import pytest
+
+from repro.core import (
+    App,
+    AppVersion,
+    GridSimulation,
+    InstanceOutcome,
+    InstanceState,
+    Job,
+    JobState,
+    JobStore,
+    Platform,
+    ProjectServer,
+    Transitioner,
+    default_cpu_plan_class,
+    fuzzy_comparator,
+    make_population,
+    next_id,
+    reset_ids,
+)
+
+
+def make_server(use_indexes=True, n_daemon_instances=1, purge_delay=1e18,
+                min_quorum=2, delay_bound=4 * 3600.0, cache_size=1024):
+    server = ProjectServer(
+        name="p", purge_delay=purge_delay, n_daemon_instances=n_daemon_instances,
+        cache_size=cache_size,
+    )
+    server.store.use_indexes = use_indexes
+    app = App(
+        name="w",
+        min_quorum=min_quorum,
+        init_ninstances=min_quorum,
+        delay_bound=delay_bound,
+        comparator=fuzzy_comparator(rtol=1e-6, atol=1e-9),
+    )
+    for osn in ("windows", "mac", "linux"):
+        app.add_version(
+            AppVersion(
+                id=next_id("appver"),
+                app_name="w",
+                platform=Platform(osn, "x86_64"),
+                version_num=1,
+                plan_class=default_cpu_plan_class(),
+            )
+        )
+    server.add_app(app)
+    return server
+
+
+def run_sim(use_indexes, n_jobs=40, n_hosts=10, horizon=2 * 86400.0,
+            purge_delay=1.25 * 86400.0, **pop_kw):
+    reset_ids()
+    server = make_server(use_indexes=use_indexes, purge_delay=purge_delay)
+    for _ in range(n_jobs):
+        server.submit_job(Job(id=next_id("job"), app_name="w",
+                              est_flop_count=0.2 * 3600 * 16.5e9))
+    pop = make_population(n_hosts, seed=1, **pop_kw)
+    sim = GridSimulation(server, pop, seed=3)
+    m = sim.run(horizon)
+    sim.audit_validation()
+    return server, sim, m
+
+
+class TestOracleParity:
+    """An N-day simulation over the indexed store must be *identical* to the
+    seed scan-based oracle: same metrics, same job states, same credit."""
+
+    @pytest.mark.parametrize("pop_kw", [
+        dict(),
+        dict(error_prob=0.05, availability=0.7),
+    ], ids=["clean", "faulty"])
+    def test_simulation_identical_to_scan_oracle(self, pop_kw):
+        srv_idx, sim_idx, m_idx = run_sim(True, **pop_kw)
+        srv_scan, sim_scan, m_scan = run_sim(False, **pop_kw)
+
+        assert vars(m_idx) == vars(m_scan)
+        jobs_idx = {j: job.state for j, job in srv_idx.store.jobs.items()}
+        jobs_scan = {j: job.state for j, job in srv_scan.store.jobs.items()}
+        assert jobs_idx == jobs_scan  # includes purge parity: same rows left
+        assert srv_idx.counts() == srv_scan.counts()
+        assert srv_idx.credit.total == srv_scan.credit.total
+        for t_idx, t_scan in zip(srv_idx.transitioners, srv_scan.transitioners):
+            assert vars(t_idx.metrics) == vars(t_scan.metrics)
+        # some work actually happened in this scenario, and the purger
+        # removed completed rows in both runs identically
+        assert m_idx.completed_instances > 0
+        assert len(srv_idx.store.jobs) < 40
+
+    def test_completed_instances_excludes_crashes(self):
+        reset_ids()
+        server = make_server()
+        for _ in range(12):
+            server.submit_job(Job(id=next_id("job"), app_name="w",
+                                  est_flop_count=0.1 * 3600 * 16.5e9))
+        pop = make_population(6, seed=1)
+        for spec in pop:
+            spec.crash_prob = 1.0  # every execution crashes: nothing completes
+        sim = GridSimulation(server, pop, seed=3)
+        sim.run(86400.0)
+        sim.audit_validation()
+        assert sim.metrics.completed_instances == 0
+        assert sim.metrics.instances_executed > 0
+
+
+class TestPendingQueues:
+    """§5.1 fault tolerance: a paused daemon's work accumulates in the
+    store's pending queues and drains without loss on resume."""
+
+    def _completed_server(self, n_jobs=8):
+        reset_ids()
+        server = make_server(min_quorum=1, purge_delay=0.0)
+        jobs = [
+            server.submit_job(Job(id=next_id("job"), app_name="w", est_flop_count=1e9))
+            for _ in range(n_jobs)
+        ]
+        server.enabled.assimilator = False
+        server.enabled.file_deleter = False
+        server.enabled.purger = False
+        server.tick(0.0)  # creates instances
+        version_id = server.store.apps["w"].versions[0].id
+        for job in jobs:
+            for inst in server.store.job_instances(job.id):
+                inst.state = InstanceState.OVER
+                inst.outcome = InstanceOutcome.SUCCESS
+                inst.output = 1.0
+                inst.host_id = 1
+                inst.app_version_id = version_id
+            job.transition_flag = True
+        return server, jobs
+
+    def test_pause_accumulates_then_drains(self):
+        server, jobs = self._completed_server()
+        store = server.store
+        server.tick(1.0)  # transitioner validates; downstream daemons paused
+        assert len(store.assimilate_pending) == len(jobs)
+        assert not store.delete_pending and not store.purge_pending
+        store.check_invariants()
+
+        server.tick(2.0)  # still paused: queues hold, nothing lost
+        assert len(store.assimilate_pending) == len(jobs)
+
+        server.enabled.assimilator = True
+        server.tick(3.0)  # assimilate drains into the file-deleter queue
+        assert not store.assimilate_pending
+        assert len(store.delete_pending) == len(jobs)
+        assert not store.purge_pending
+        store.check_invariants()
+
+        server.enabled.file_deleter = True
+        server.enabled.purger = True
+        server.tick(4.0)  # delete → purge cascade drains in one pass
+        assert not store.delete_pending and not store.purge_pending
+        assert not store.jobs  # fully purged, no loss
+        store.check_invariants()
+
+    def test_retained_rows_wait_in_purge_heap(self):
+        # completed rows inside the retention window (§4) stay heaped: the
+        # purger pops nothing until the window passes, instead of
+        # re-scanning every retained job each tick
+        server, jobs = self._completed_server()
+        server.purge_delay = 100.0
+        server.enabled.assimilator = True
+        server.enabled.file_deleter = True
+        server.enabled.purger = True
+        server.tick(1.0)  # validate + assimilate + delete; purge gated
+        store = server.store
+        assert len(store.purge_pending) == len(jobs)
+        assert store.purgeable_jobs(50.0 - server.purge_delay) == []
+        assert len(store._purge_heap) >= len(jobs)  # nothing consumed
+        store.check_invariants()
+        server.tick(200.0)  # window passed: everything purges
+        assert not store.purge_pending and not store.jobs
+        store.check_invariants()
+
+    def test_transitioner_pause_accumulates_flags(self):
+        reset_ids()
+        server = make_server()
+        server.enabled.transitioner = False
+        for _ in range(5):
+            server.submit_job(Job(id=next_id("job"), app_name="w", est_flop_count=1e9))
+        server.tick(0.0)
+        assert len(server.store.transition_pending) == 5
+        assert not server.store.instances
+        server.enabled.transitioner = True
+        server.tick(1.0)
+        assert not server.store.transition_pending
+        assert len(server.store.instances) == 10  # quorum-2 instances created
+        server.store.check_invariants()
+
+
+class TestShardedDeadlines:
+    """Satellite fix: `_check_deadlines` honors ID-space sharding — with
+    n>1 daemon instances each transitioner mutates only its own shard."""
+
+    @pytest.mark.parametrize("use_indexes", [True, False], ids=["indexed", "scan"])
+    def test_each_instance_handles_own_shard(self, use_indexes):
+        reset_ids()
+        server = make_server(use_indexes=use_indexes, n_daemon_instances=2,
+                             min_quorum=1)
+        jobs = [
+            server.submit_job(Job(id=next_id("job"), app_name="w",
+                                  est_flop_count=1e9, delay_bound=100.0))
+            for _ in range(6)
+        ]
+        for t in server.transitioners:
+            t.tick(0.0)
+        for job in jobs:
+            for inst in server.store.job_instances(job.id):
+                inst.state = InstanceState.IN_PROGRESS
+                inst.deadline = 100.0
+
+        t0 = server.transitioners[0]
+        t0.tick(200.0)  # only shard job_id % 2 == 0 may be touched
+        for job in jobs:
+            insts = server.store.job_instances(job.id)
+            timed_out = [i for i in insts if i.outcome == InstanceOutcome.NO_REPLY]
+            if job.id % 2 == 0:
+                assert timed_out, f"job {job.id} in shard 0 not handled"
+            else:
+                assert not timed_out, f"job {job.id} outside shard 0 was mutated"
+        assert t0.metrics.timeouts == 3
+
+        server.transitioners[1].tick(200.0)
+        assert server.transitioners[1].metrics.timeouts == 3
+        assert all(
+            i.outcome == InstanceOutcome.NO_REPLY or i.state == InstanceState.UNSENT
+            for job in jobs for i in server.store.job_instances(job.id)
+        )
+        if use_indexes:
+            server.store.check_invariants()
+
+
+class TestStoreIndexes:
+    def _store(self, min_quorum=2):
+        reset_ids()
+        store = JobStore()
+        app = App(name="a", min_quorum=min_quorum, init_ninstances=min_quorum)
+        app.add_version(
+            AppVersion(
+                id=next_id("appver"),
+                app_name="a",
+                platform=Platform("windows", "x86_64"),
+                version_num=1,
+                plan_class=default_cpu_plan_class(),
+            )
+        )
+        store.add_app(app)
+        return store
+
+    def test_unsent_queue_lazy_compaction(self):
+        store = self._store()
+        job = store.submit_job(Job(id=next_id("job"), app_name="a", est_flop_count=1e9))
+        insts = [store.create_instance(job) for _ in range(10)]
+        # dispatch (invalidate) the first three and one mid-queue entry
+        for i in (0, 1, 2, 5):
+            insts[i].state = InstanceState.IN_PROGRESS
+        got = store.unsent_instances("a", limit=4)
+        assert [g.id for g in got] == [insts[3].id, insts[4].id, insts[6].id, insts[7].id]
+        q = store._unsent["a"]
+        # stale head entries were dropped; the queue was not rebuilt past
+        # the walk point (the mid-queue stale entry survives until it
+        # surfaces at the head)
+        assert q[0] == insts[3].id
+        assert insts[5].id in q
+        assert insts[9].id in q
+
+    def test_requeue_on_state_reset(self):
+        store = self._store(min_quorum=1)
+        job = store.submit_job(Job(id=next_id("job"), app_name="a", est_flop_count=1e9))
+        inst = store.create_instance(job)
+        inst.state = InstanceState.IN_PROGRESS
+        assert store.unsent_instances("a") == []
+        inst.state = InstanceState.UNSENT  # row returns to the dispatch pool
+        assert [i.id for i in store.unsent_instances("a")] == [inst.id]
+        store.check_invariants()
+
+    def test_requeue_never_duplicates_queued_entry(self):
+        # a row flipping UNSENT -> IN_PROGRESS -> UNSENT while its original
+        # entry is still mid-queue must not appear twice
+        store = self._store(min_quorum=1)
+        job = store.submit_job(Job(id=next_id("job"), app_name="a", est_flop_count=1e9))
+        i1, i2 = store.create_instance(job), store.create_instance(job)
+        i2.state = InstanceState.IN_PROGRESS  # i2's entry goes stale mid-queue
+        i2.state = InstanceState.UNSENT  # ...and live again, not re-appended
+        got = store.unsent_instances("a", limit=10)
+        assert [g.id for g in got] == [i1.id, i2.id]
+        store.check_invariants()
+
+    def test_feeder_refills_past_cached_queue_head(self):
+        # backlog >> cache: the oldest UNSENT rows are the cached ones; the
+        # refill must look past them instead of starving (in-cache ids are
+        # excluded inside the queue walk, not after the limit)
+        reset_ids()
+        server = make_server(min_quorum=1, cache_size=8)
+        for _ in range(40):
+            server.submit_job(Job(id=next_id("job"), app_name="w", est_flop_count=1e9))
+        server.tick(0.0)
+        feeder = server.feeder
+        cached = [s for s in feeder.slots if s is not None]
+        assert len(cached) == 8
+        for s in cached[:4]:  # dispatch half the cache
+            server.store.instances[s.instance_id].state = InstanceState.IN_PROGRESS
+            feeder.clear_slot(s.instance_id)
+        assert sum(1 for s in feeder.slots if s is not None) == 4
+        assert feeder.fill() == 4  # refilled from past the cached queue head
+        live = [s for s in feeder.slots if s is not None and not feeder._stale(s)]
+        assert len(live) == 8
+        assert len({s.instance_id for s in live}) == 8
+        server.store.check_invariants()
+
+    def test_slow_check_index_matches_scan(self):
+        from repro.core.types import Host, ProcessingResource, ResourceType
+
+        store = self._store()
+        # two hosts owned by the same volunteer (§6.4: one per volunteer)
+        for hid, vol in ((1, 7), (2, 7), (3, 8)):
+            store.add_host(Host(
+                id=hid,
+                platforms=(Platform("windows", "x86_64"),),
+                resources={ResourceType.CPU: ProcessingResource(ResourceType.CPU, 4, 1e10)},
+                volunteer_id=vol,
+            ))
+        job = store.submit_job(Job(id=next_id("job"), app_name="a", est_flop_count=1e9))
+        inst = store.create_instance(job)
+        inst.state = InstanceState.IN_PROGRESS
+        inst.host_id = 1
+        for hid, expect in ((1, True), (2, True), (3, False)):
+            store.use_indexes = True
+            assert store.host_has_instance_of_job(hid, job.id) is expect
+            store.use_indexes = False
+            assert store.host_has_instance_of_job(hid, job.id) is expect
+        store.use_indexes = True
+        store.check_invariants()
+
+    def test_deadline_heap_skips_stale_entries(self):
+        store = self._store(min_quorum=1)
+        job = store.submit_job(Job(id=next_id("job"), app_name="a", est_flop_count=1e9))
+        a, b = store.create_instance(job), store.create_instance(job)
+        for inst in (a, b):
+            inst.state = InstanceState.IN_PROGRESS
+            inst.deadline = 50.0
+        a.state = InstanceState.OVER  # completed before deadline: entry stale
+        b.deadline = 80.0  # extended: the 50.0 entry is stale
+        assert store.expired_instances(60.0) == []
+        assert store.expired_instances(90.0) == [b]
+        assert store.expired_instances(90.0) == []  # popped exactly once
+
+    def test_invariant_checker_detects_corruption(self):
+        store = self._store()
+        job = store.submit_job(Job(id=next_id("job"), app_name="a", est_flop_count=1e9))
+        store.check_invariants()
+        store.transition_pending.discard(job.id)  # corrupt an index
+        with pytest.raises(AssertionError, match="transition_pending"):
+            store.check_invariants()
+
+    def test_batch_completion_counter(self):
+        reset_ids()
+        server = make_server(min_quorum=1)
+        jobs = [Job(id=next_id("job"), app_name="w", est_flop_count=1e9) for _ in range(3)]
+        batch = server.submit_batch(jobs, submitter="s", now=0.0)
+        server.tick(0.0)
+        store = server.store
+        assert store._batch_open[batch.id] == 3
+        assert not store.batch_done(batch.id)
+        for job in jobs[:2]:
+            job.state = JobState.SUCCESS
+        assert not store.batch_done(batch.id)
+        assert not store.batch_done_pending
+        jobs[2].state = JobState.SUCCESS
+        assert store.batch_done(batch.id)
+        assert store.batch_done_pending == {batch.id}
+        server._update_batches(5.0)
+        assert batch.completed_time == 5.0
+        assert not store.batch_done_pending
+        store.check_invariants()
+
+    def test_batch_reopened_by_late_submission(self):
+        # submitting into a momentarily-complete batch must clear its done
+        # flag: completed_time is only stamped once the batch truly drains
+        reset_ids()
+        server = make_server(min_quorum=1)
+        first = Job(id=next_id("job"), app_name="w", est_flop_count=1e9)
+        batch = server.submit_batch([first], submitter="s", now=0.0)
+        server.tick(0.0)
+        first.state = JobState.SUCCESS
+        store = server.store
+        assert store.batch_done_pending == {batch.id}
+
+        late = Job(id=next_id("job"), app_name="w", est_flop_count=1e9,
+                   batch_id=batch.id, submitter="s")
+        server.submit_job(late, now=1.0)
+        assert not store.batch_done_pending
+        server._update_batches(2.0)
+        assert batch.completed_time is None  # still open
+        store.check_invariants()
+
+        late.state = JobState.SUCCESS
+        assert store.batch_done_pending == {batch.id}
+        server._update_batches(3.0)
+        assert batch.completed_time == 3.0
+        store.check_invariants()
