@@ -1,0 +1,212 @@
+"""Client-tick cost at large host populations (§6.1–6.2, §9).
+
+The EmBOINC-style emulator models large volunteer populations, but the
+scalar client path runs the §6.1 WRR simulation and run-set selection once
+per host per event. This benchmark measures one full *client tick* — the
+work every host does when sharing a simulator tick: the run-set reschedule
+(``Client.schedule``: WRR deadline-miss prediction + ordering + greedy
+maximal feasible set) plus the §6.2 work-fetch test (``needs_work``:
+another WRR pass for shortfall/idle) — through both engines:
+
+  * ``scalar``  — per-host Python: ``schedule(now)`` + ``needs_work(now)``
+                  for every client (exactly what ``GridSimulation`` does
+                  without coalescing);
+  * ``batch``   — ``BatchClientEngine.tick_batch``: one struct-of-arrays
+                  snapshot and one fused WRR pass for the whole population.
+
+The workload models a deep-buffer BOINC client fleet: 4–16 cores, 35% of
+hosts with a GPU, 20–40 queued jobs per host (a 0.5-day B_HI buffer of
+0.1–2 h jobs), mixed progress/deadlines. The two paths are verified
+result-identical on a small population before timing. Per-side times take
+the **minimum over alternating rounds** (the standard noise-robust timing
+estimator); the scalar side at the 100k population is extrapolated from a
+10k-host sample (clients are independent, per-host cost is
+population-invariant) and flagged as such.
+
+Acceptance floor: **≥10×** batched-vs-scalar client tick cost at the
+10k-host population. Smoke mode (CI): ``--smoke`` / ``BENCH_CLIENTS_SMOKE=1``
+trims to a 2000-host population with a 5× floor (CI machine variance) and
+asserts it. Results are written to ``benchmarks/BENCH_clients.json``
+(machine-readable; schema {schema, rows, acceptance}).
+"""
+from __future__ import annotations
+
+import gc
+import os
+import random
+import sys
+from typing import List, Optional
+
+from .common import RESULTS, emit, timer, write_bench_json
+
+from repro.core import BatchClientEngine, ResourceType
+from repro.core.client import (
+    Client,
+    ClientJob,
+    ClientPrefs,
+    ClientResource,
+    ProjectAttachment,
+)
+
+CPU, GPU = ResourceType.CPU, ResourceType.GPU
+
+ACCEPTANCE_FLOOR = 10.0  # x speedup at the 10k-host population
+SMOKE_FLOOR = 5.0  # CI machines are slower and noisier
+_FLOOR_POP = 10_000
+
+
+def make_fleet(n_hosts: int, seed: int = 0, max_jobs: int = 40) -> List[Client]:
+    """A deep-buffer client fleet mid-run: every host holds 0.5 days of
+    queued work for 4–16 cores (§6.2 B_HI), some of it running/preempted."""
+    rng = random.Random(seed)
+    fleet = []
+    for h in range(n_hosts):
+        resources = {CPU: ClientResource(CPU, rng.choice([4, 8, 16]), rng.uniform(5e9, 4e10))}
+        if rng.random() < 0.35:
+            resources[GPU] = ClientResource(GPU, 1, 1e12)
+        c = Client(
+            host_id=h + 1,
+            resources=resources,
+            prefs=ClientPrefs(buffer_lo_days=0.05, buffer_hi_days=0.5),
+            ram_bytes=8e9,
+        )
+        c.attach(ProjectAttachment(name="p", resource_share=100.0))
+        for i in range(rng.randrange(max_jobs // 2, max_jobs + 1)):
+            usage = {CPU: 1.0}
+            if GPU in resources and rng.random() < 0.4:
+                usage = {CPU: 0.5, GPU: 1.0}
+            est_flops = rng.uniform(5e9, 2e10)
+            c.jobs.append(ClientJob(
+                instance_id=h * 100 + i,
+                job_id=h * 100 + i,
+                project="p",
+                app_name="work",
+                usage=usage,
+                est_flops=est_flops,
+                est_flop_count=rng.uniform(0.1, 2.0) * 3600 * est_flops,
+                deadline=rng.uniform(3600.0, 86400.0),
+                est_wss=rng.choice([0.0, 0.5e9]),
+                fraction_done=rng.choice([0.0, 0.0, 0.4]),
+                runtime=rng.uniform(0.0, 1800.0),
+            ))
+        fleet.append(c)
+    return fleet
+
+
+def _scalar_tick(fleet: List[Client], now: float) -> None:
+    for c in fleet:
+        c.schedule(now)
+        c.needs_work(now)
+
+
+def _verify_parity(seed: int, now: float) -> None:
+    """Refuse to benchmark diverged engines: run sets and work requests
+    must be identical on a twin population."""
+    a = make_fleet(200, seed, max_jobs=16)
+    b = make_fleet(200, seed, max_jobs=16)
+    runs_b, needs_b = BatchClientEngine().tick_batch(b, now)
+    for ca, rb, nb in zip(a, runs_b, needs_b):
+        ra = ca.schedule(now)
+        na = ca.needs_work(now)
+        assert [j.instance_id for j in ra] == [j.instance_id for j in rb], ca.host_id
+        assert na == nb, ca.host_id
+
+
+def _measure(pop: int, rounds: int, scalar_sample: int) -> tuple:
+    """Min-over-rounds seconds per tick for (scalar, batch). The scalar
+    side is measured on ``min(pop, scalar_sample)`` hosts and scaled by
+    population (per-host independence); returns (scalar_s, batch_s,
+    extrapolated)."""
+    now = 500.0
+    n_scalar = min(pop, scalar_sample)
+    extrapolated = n_scalar < pop
+    scalar_fleet = make_fleet(n_scalar, seed=3)
+    batch_fleet = make_fleet(pop, seed=3)
+    engine = BatchClientEngine()
+    # the resident fleets are hundreds of thousands of long-lived objects;
+    # freeze them out of the cyclic GC so collection sweeps triggered by the
+    # engines' allocation bursts don't bill fleet traversal to either side
+    gc.collect()
+    gc.freeze()
+    scalar_s: Optional[float] = None
+    batch_s: Optional[float] = None
+    try:
+        for _ in range(rounds):
+            t0 = timer()
+            _scalar_tick(scalar_fleet, now)
+            t = timer() - t0
+            scalar_s = t if scalar_s is None else min(scalar_s, t)
+            t0 = timer()
+            engine.tick_batch(batch_fleet, now)
+            t = timer() - t0
+            batch_s = t if batch_s is None else min(batch_s, t)
+    finally:
+        gc.unfreeze()
+    return scalar_s * (pop / n_scalar), batch_s, extrapolated
+
+
+def run() -> None:
+    smoke = "--smoke" in sys.argv or bool(os.environ.get("BENCH_CLIENTS_SMOKE"))
+    if smoke:
+        populations = (2_000,)
+        rounds = 2
+        floor = SMOKE_FLOOR
+    else:
+        populations = (1_000, 10_000, 100_000)
+        rounds = 3
+        floor = ACCEPTANCE_FLOOR
+    floor_pop = populations[-1] if smoke else _FLOOR_POP
+    scalar_sample = 10_000
+
+    _verify_parity(11, 500.0)
+
+    start_row = len(RESULTS)
+    speedup_at_floor: Optional[float] = None
+    for pop in populations:
+        scalar_s, batch_s, extrapolated = _measure(pop, rounds, scalar_sample)
+        speedup = scalar_s / batch_s if batch_s > 0 else 0.0
+        tag = ";scalar_extrapolated=true" if extrapolated else ""
+        emit(
+            f"clients_tick_scalar_{pop}hosts",
+            scalar_s * 1e6,
+            f"tick_ms={scalar_s * 1e3:.1f}{tag}",
+        )
+        emit(
+            f"clients_tick_batch_{pop}hosts",
+            batch_s * 1e6,
+            f"tick_ms={batch_s * 1e3:.1f}",
+        )
+        is_floor = pop == floor_pop
+        emit(
+            f"clients_speedup_{pop}hosts",
+            0.0,
+            f"speedup={speedup:.1f}x"
+            + (f";floor={floor:.0f}x;pass={speedup >= floor}" if is_floor else ""),
+        )
+        if is_floor:
+            speedup_at_floor = speedup
+
+    acceptance = {
+        "metric": f"client tick speedup at {floor_pop} hosts",
+        "floor": floor,
+        "measured": speedup_at_floor,
+        "pass": (speedup_at_floor or 0.0) >= floor,
+        "smoke": smoke,
+    }
+    run.acceptance = acceptance  # picked up by benchmarks.run and CI
+    write_bench_json(
+        path=os.environ.get(
+            "BENCH_CLIENTS_JSON_PATH",
+            os.path.join(os.path.dirname(__file__), "BENCH_clients.json"),
+        ),
+        rows=RESULTS[start_row:],
+        extra={"acceptance": acceptance},
+    )
+    if smoke and not acceptance["pass"]:
+        raise SystemExit(
+            f"bench_clients smoke floor failed: {speedup_at_floor:.1f}x < {floor:.0f}x"
+        )
+
+
+if __name__ == "__main__":
+    run()

@@ -33,14 +33,18 @@ def emit(name: str, us_per_call: float, derived: str) -> None:
     RESULTS.append({"name": name, "us_per_call": us_per_call, "derived": derived})
 
 
-def write_bench_json(path: Optional[str] = None, extra: Optional[Dict[str, Any]] = None) -> str:
-    """Dump every row emitted so far as JSON so CI can track the perf
-    trajectory. Default path: ``benchmarks/BENCH_daemons.json`` (override
-    with ``BENCH_JSON_PATH``)."""
+def write_bench_json(
+    path: Optional[str] = None,
+    extra: Optional[Dict[str, Any]] = None,
+    rows: Optional[List[Dict[str, Any]]] = None,
+) -> str:
+    """Dump emitted rows (all of ``RESULTS`` by default, or an explicit
+    slice) as JSON so CI can track the perf trajectory. Default path:
+    ``benchmarks/BENCH_daemons.json`` (override with ``BENCH_JSON_PATH``)."""
     path = path or os.environ.get(
         "BENCH_JSON_PATH", str(Path(__file__).resolve().parent / "BENCH_daemons.json")
     )
-    payload: Dict[str, Any] = {"schema": 1, "rows": RESULTS}
+    payload: Dict[str, Any] = {"schema": 1, "rows": RESULTS if rows is None else rows}
     if extra:
         payload.update(extra)
     Path(path).write_text(json.dumps(payload, indent=2) + "\n")

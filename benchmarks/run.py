@@ -5,6 +5,7 @@ and their paper sections:
 
   bench_dispatch    S5.1/[17]  hundreds of dispatches per second; fast batch submit
   bench_daemons     S5.1       indexed store: O(dirty) daemon passes at 1M-job backlogs
+  bench_clients     S6.1-6.2   vectorized host-population client engine vs scalar ticks
   bench_validation  S3.4       adaptive replication: overhead -> ~1, bounded errors
   bench_allocation  S3.9       linear-bounded model minimizes small-batch turnaround
   bench_scheduling  S6.1       EDF override avoids WRR deadline misses
@@ -29,6 +30,7 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 def main() -> None:
     from . import (
         bench_allocation,
+        bench_clients,
         bench_credit,
         bench_daemons,
         bench_dispatch,
@@ -45,6 +47,7 @@ def main() -> None:
     for mod in (
         bench_dispatch,
         bench_daemons,
+        bench_clients,
         bench_validation,
         bench_allocation,
         bench_scheduling,

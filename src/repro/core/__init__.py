@@ -14,12 +14,14 @@ Layout (paper section in parens):
   scheduler    — feeder, job cache, dispatch policy (§5.1, §6.4)
   batch_dispatch — vectorized slots×hosts batch scoring engine (§5.1, §6.4)
   client       — WRR/EDF resource scheduling + work fetch (§6.1–6.2)
+  batch_client — vectorized host-population client engine (§6.1–6.2, §9)
   server       — project-server facade w/ daemon set (§5.1)
   simulator    — EmBOINC-style virtual-time emulator (§9)
 """
 from .adaptive import AdaptiveReplication
 from .allocation import LinearBoundedAllocator
 from .backoff import ExponentialBackoff
+from .batch_client import BatchClientEngine
 from .batch_dispatch import BatchDispatchEngine
 from .client import Client, ClientJob, ClientPrefs, ClientResource, ProjectAttachment
 from .coordinator import AMReply, Coordinator, VettedProject
@@ -68,6 +70,7 @@ __all__ = [
     "App",
     "AppVersion",
     "Batch",
+    "BatchClientEngine",
     "BatchDispatchEngine",
     "Candidate",
     "Client",

@@ -14,6 +14,11 @@ Three interacting policies (Fig. 4): the server's job selection is in
 
 The client is driven in virtual time by ``simulator.py`` (EmBOINC-style) or
 in wall time by the grid runtime.
+
+This module is the *scalar reference oracle*: ``batch_client.py`` runs the
+same WRR simulation, run-set selection, and work-fetch test for a whole
+host population in fused NumPy passes, bit-exact with this path
+(``tests/test_batch_client.py``).
 """
 from __future__ import annotations
 
@@ -52,6 +57,7 @@ class ClientJob:
     est_flop_count: float  # job size estimate (§3.3)
     deadline: float
     est_wss: float = 0.0  # RAM working set (§6.1)
+    received_time: float = 0.0  # when the client got the job (reporting, §6.2)
     fraction_done: float = 0.0
     fraction_done_exact: bool = False
     runtime: float = 0.0  # scaled runtime so far
@@ -212,7 +218,11 @@ def wrr_simulate(
                 done_now.append(j)
                 if now + t > j.deadline:
                     misses.append(j.instance_id)
-        pending = [j for j in pending if j not in done_now]
+        if done_now:
+            # drop by instance id: O(pending) per event, and immune to
+            # dataclass __eq__ conflating distinct jobs with equal fields
+            done_ids = {j.instance_id for j in done_now}
+            pending = [j for j in pending if j.instance_id not in done_ids]
 
     # any jobs never scheduled (infeasible) count as misses
     for j in pending:
@@ -271,16 +281,28 @@ class Client:
 
     def attach(self, project: ProjectAttachment, now: float = 0.0) -> None:
         self.projects[project.name] = project
-        # priority accrues with resource share (linear-bounded, §6.1)
-        total_share = sum(p.resource_share for p in self.projects.values())
-        for name, p in self.projects.items():
-            self.rec.ensure(name, now).rate = p.resource_share / max(total_share, 1e-9)
+        self._resplit_shares(now)
 
-    def detach(self, name: str) -> None:
-        """Account-manager-driven detach (§2.3): abandon that project's jobs."""
+    def detach(self, name: str, now: float = 0.0) -> None:
+        """Account-manager-driven detach (§2.3): abandon that project's jobs
+        and purge every trace of it — queued/running jobs, unreported and
+        reported-pending results, and its REC allocator account (leaving the
+        row would keep accruing balance and skew the remaining projects'
+        relative priorities)."""
         self.projects.pop(name, None)
         self.jobs = [j for j in self.jobs if j.project != name]
         self.running = [j for j in self.running if j.project != name]
+        self.completed = [j for j in self.completed if j.project != name]
+        self.reported_pending = [j for j in self.reported_pending if j.project != name]
+        self.rec.accounts.pop(name, None)
+        self._resplit_shares(now)
+
+    def _resplit_shares(self, now: float) -> None:
+        """Priority accrues with resource share (linear-bounded, §6.1): the
+        attached projects split the total share between them."""
+        total_share = sum(p.resource_share for p in self.projects.values())
+        for name, p in self.projects.items():
+            self.rec.ensure(name, now).rate = p.resource_share / max(total_share, 1e-9)
 
     def project_priorities(self, now: float) -> Dict[str, float]:
         return {name: self.rec.priority(name, now) for name in self.projects}
@@ -288,16 +310,41 @@ class Client:
     # -- resource scheduling (§6.1) --
 
     def schedule(self, now: float) -> List[ClientJob]:
-        """Choose and return the set of jobs to run (maximal feasible)."""
+        """Choose and return the set of jobs to run (maximal feasible).
+
+        Decomposed so the vectorized population engine
+        (``batch_client.BatchClientEngine``) can reuse the mutation steps:
+        WRR miss prediction → ``_select_run_set`` (ordering + greedy) →
+        ``_apply_run_set`` (run/preempt transitions).
+        """
         queued = [j for j in self.jobs if j.state != RunState.DONE]
         if not queued:
             self.running = []
             return []
         prio = self.project_priorities(now)
         sim = wrr_simulate(queued, self.resources, prio, self.prefs, now, self.ram_bytes)
-        miss_set = set(sim.deadline_misses)
+        self._set_miss_flags(queued, set(sim.deadline_misses))
+        chosen = self._select_run_set(queued, prio, now)
+        return self._apply_run_set(chosen, now)
+
+    # class attr (not a dataclass field): True forces the first sweep, after
+    # which it tracks whether any queued job carries a deadline-miss flag
+    _any_miss_flags = True
+
+    def _set_miss_flags(self, queued: Sequence[ClientJob], miss_set: set) -> None:
+        if not miss_set and not self._any_miss_flags:
+            return  # no predicted misses and every flag already False
+        any_f = False
         for j in queued:
-            j.deadline_miss = j.instance_id in miss_set
+            f = j.instance_id in miss_set
+            j.deadline_miss = f
+            any_f = any_f or f
+        self._any_miss_flags = any_f
+
+    def _select_run_set(
+        self, queued: Sequence[ClientJob], prio: Dict[str, float], now: float
+    ) -> List[ClientJob]:
+        """§6.1 ordering + greedy maximal feasible set (scalar reference)."""
 
         def order_key(j: ClientJob):
             in_slice = j.state == RunState.RUNNING and (now - j.slice_start) < self.prefs.time_slice
@@ -347,8 +394,10 @@ class Client:
             cpu_sum_all += cu
             ram_left -= j.est_wss
             chosen.append(j)
+        return chosen
 
-        # apply run/preempt transitions
+    def _apply_run_set(self, chosen: List[ClientJob], now: float) -> List[ClientJob]:
+        """Apply run/preempt transitions for a computed run set."""
         chosen_ids = {j.instance_id for j in chosen}
         for j in self.running:
             if j.instance_id not in chosen_ids and j.state == RunState.RUNNING:
@@ -363,6 +412,14 @@ class Client:
 
     # -- execution accounting (driven by the simulator / runtime) --
 
+    def debit_usage(self, job: ClientJob, dt: float, now: float) -> None:
+        """Charge ``dt`` seconds of *executed* time on ``job`` to its
+        project's REC account (§6.1) — the accounting formula shared by
+        ``advance`` (which passes throttle-scaled time, §2.4) and the
+        simulator's execution path (which runs jobs at full speed and so
+        passes raw dt)."""
+        self.rec.debit(job.project, dt * max(sum(job.usage.values()), 1.0), now)
+
     def advance(self, dt: float, now: float) -> List[ClientJob]:
         """Advance running jobs by scaled time ``dt``; returns completions."""
         done: List[ClientJob] = []
@@ -375,7 +432,7 @@ class Client:
             if total <= 0 or math.isinf(total):
                 continue
             j.fraction_done = min(1.0, j.runtime / total)
-            self.rec.debit(j.project, eff_dt * max(sum(j.usage.values()), 1.0), now)
+            self.debit_usage(j, eff_dt, now)
             if j.fraction_done >= 1.0:
                 j.state = RunState.DONE
                 done.append(j)
@@ -394,10 +451,17 @@ class Client:
 
     # -- work fetch (§6.2) --
 
-    def needs_work(self, now: float) -> Dict[ResourceType, ResourceRequest]:
-        queued = [j for j in self.jobs if j.state != RunState.DONE]
-        prio = self.project_priorities(now)
-        sim = wrr_simulate(queued, self.resources, prio, self.prefs, now, self.ram_bytes)
+    def needs_work(
+        self, now: float, sim: Optional[WRRResult] = None
+    ) -> Dict[ResourceType, ResourceRequest]:
+        if sim is None:
+            queued = [j for j in self.jobs if j.state != RunState.DONE]
+            prio = self.project_priorities(now)
+            sim = wrr_simulate(queued, self.resources, prio, self.prefs, now, self.ram_bytes)
+        return self._requests_from_sim(sim)
+
+    def _requests_from_sim(self, sim: WRRResult) -> Dict[ResourceType, ResourceRequest]:
+        """Buffer-watermark test (§6.2) over a WRR simulation result."""
         out: Dict[ResourceType, ResourceRequest] = {}
         for r, res in self.resources.items():
             needs = sim.saturated_until.get(r, 0.0) < self.prefs.b_lo
@@ -418,10 +482,14 @@ class Client:
             return False
         return True
 
-    def choose_fetch_project(self, now: float) -> Optional[WorkRequest]:
+    def choose_fetch_project(
+        self, now: float, needs: Optional[Dict[ResourceType, ResourceRequest]] = None
+    ) -> Optional[WorkRequest]:
         """The work-fetch policy (§6.2): highest-priority project with a
-        fetchable resource that needs replenishment."""
-        needs = self.needs_work(now)
+        fetchable resource that needs replenishment. ``needs`` may be
+        precomputed (the batched engine runs one fused WRR pass per tick)."""
+        if needs is None:
+            needs = self.needs_work(now)
         if not needs:
             return None
         prio = self.project_priorities(now)
@@ -437,10 +505,16 @@ class Client:
                     return WorkRequest(project=name, requests=reqs)
         return None
 
-    def piggyback_request(self, project: str, now: float) -> Dict[ResourceType, ResourceRequest]:
+    def piggyback_request(
+        self,
+        project: str,
+        now: float,
+        needs: Optional[Dict[ResourceType, ResourceRequest]] = None,
+    ) -> Dict[ResourceType, ResourceRequest]:
         """When RPCing ``project`` for other reasons, attach a work request
         for each resource where it is the top fetchable project (§6.2)."""
-        needs = self.needs_work(now)
+        if needs is None:
+            needs = self.needs_work(now)
         out: Dict[ResourceType, ResourceRequest] = {}
         prio = self.project_priorities(now)
         p = self.projects.get(project)
@@ -464,9 +538,14 @@ class Client:
             return True
         if len(pend) >= batch_threshold:
             return True
-        # report when a deadline approaches (§6.2)
-        soonest = min(j.deadline for j in pend)
-        return (soonest - now) < 0.1 * max(soonest, 1.0) or now >= soonest - 3600.0
+        # report when a deadline approaches (§6.2). The window is *relative*
+        # to the job's own deadline allowance (deadline - received_time):
+        # comparing against 0.1 × the absolute virtual-time deadline made
+        # every completion report immediately once now grew past ~90% of the
+        # deadline value, silently defeating report batching in long runs.
+        soonest = min(pend, key=lambda j: j.deadline)
+        window = max(3600.0, 0.1 * max(soonest.deadline - soonest.received_time, 0.0))
+        return now >= soonest.deadline - window
 
     def take_completed(self, project: str) -> List[ClientJob]:
         out = [j for j in self.completed if j.project == project]
@@ -477,7 +556,7 @@ class Client:
 
     def apply_am_reply(self, attach: Sequence[ProjectAttachment], detach: Sequence[str], now: float = 0.0) -> None:
         for name in detach:
-            self.detach(name)
+            self.detach(name, now)
         for p in attach:
             if p.name not in self.projects:
                 self.attach(p, now)

@@ -19,6 +19,7 @@ import random
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
+from .batch_client import BatchClientEngine
 from .client import (
     Client,
     ClientJob,
@@ -201,6 +202,7 @@ class GridSimulation:
         executor: Optional[Callable[[Any, Host], Any]] = None,
         corruptor: Optional[Callable[[Any, random.Random], Any]] = None,
         coalesce_rpcs: bool = True,
+        batch_clients: bool = True,
     ) -> None:
         self.server = server
         self.specs: Dict[int, HostSpec] = {s.host.id: s for s in population}
@@ -213,6 +215,12 @@ class GridSimulation:
         # differently when a coalesced batch carries completion reports,
         # because all requests are built before any reply is applied.
         self.coalesce_rpcs = coalesce_rpcs
+        # client half of the same architecture (§6.1–6.2): work-fetch
+        # decisions and run-set reschedules for hosts sharing a tick go
+        # through the vectorized host-population engine. Bit-exact with the
+        # scalar per-host path (tests/test_batch_client.py).
+        self.batch_clients = batch_clients
+        self.client_engine = BatchClientEngine()
         self.ground_truth = ground_truth or (lambda job_id: float(job_id) * 1.5)
         # real-compute hook (grid runtime): executor(job, host) -> output
         self.executor = executor
@@ -304,8 +312,25 @@ class GridSimulation:
                 else:
                     self._handle_rpc_batch(batch, t)
             elif kind == _COMPLETE:
-                if self._event_gen.pop(seq, -1) == self._gen.get(host_id, 0):
-                    self._handle_completions(host_id, t)
+                valid = self._event_gen.pop(seq, -1) == self._gen.get(host_id, 0)
+                hids = [host_id] if valid else []
+                if self.batch_clients:
+                    # coalesce same-tick completions into one batched
+                    # reschedule pass over the affected hosts
+                    while (
+                        self._heap
+                        and self._heap[0][0] == t
+                        and self._heap[0][2] == _COMPLETE
+                    ):
+                        _, seq2, _, hid2 = heapq.heappop(self._heap)
+                        self._advance_running(hid2, t)
+                        if self._event_gen.pop(seq2, -1) == self._gen.get(hid2, 0):
+                            hids.append(hid2)
+                    hids = list(dict.fromkeys(hids))
+                if len(hids) == 1:
+                    self._handle_completions(hids[0], t)
+                elif hids:
+                    self._handle_completions_batch(hids, t)
             elif kind == _AVAIL:
                 self._toggle_availability(host_id, t)
             elif kind == _CHURN:
@@ -364,13 +389,23 @@ class GridSimulation:
         dt = t - last
         if dt <= 0:
             return
+        client = self.clients.get(host_id)
         for rj in running.values():
-            if rj.client_job.state == RunState.RUNNING:
+            cj = rj.client_job
+            if cj.state == RunState.RUNNING:
                 rj.accrued += dt
-                rj.client_job.runtime += dt
+                cj.runtime += dt
                 total = max(rj.actual_total, 1e-9)
-                rj.client_job.fraction_done = min(1.0, rj.accrued / total)
-                self.metrics.busy_cpu_seconds += dt * rj.client_job.cpu_usage()
+                cj.fraction_done = min(1.0, rj.accrued / total)
+                self.metrics.busy_cpu_seconds += dt * cj.cpu_usage()
+                if client is not None:
+                    # REC debiting (§6.1): the simulator's accounting path
+                    # must charge project usage like Client.advance does, or
+                    # scheduling priorities stay frozen at their initial
+                    # resource-share values for the whole run. Raw dt: this
+                    # execution model advances jobs at full speed (no §2.4
+                    # throttling), so the charge matches work performed.
+                    client.debit_usage(cj, dt, t)
 
     def _reschedule_completions(self, host_id: int, t: float) -> None:
         """(Re)issue completion events for the host's running set."""
@@ -381,11 +416,13 @@ class GridSimulation:
                 remaining = max(0.0, rj.actual_total - rj.accrued)
                 self._push(t + remaining, _COMPLETE, host_id, gen)
 
-    def _handle_completions(self, host_id: int, t: float) -> None:
+    def _mark_completions(self, host_id: int, t: float) -> Optional[bool]:
+        """Flip finished running jobs to DONE; returns None if the host is
+        gone/unavailable, else whether anything completed."""
         spec = self.specs.get(host_id)
         client = self.clients.get(host_id)
         if spec is None or client is None or not self.available.get(host_id, False):
-            return
+            return None
         running = self.running[host_id]
         done_ids = [
             iid
@@ -402,24 +439,63 @@ class GridSimulation:
             client.completed.append(cj)
             self.metrics.instances_executed += 1
             self.metrics.flops_done += cj.est_flop_count
-        if done_ids:
+        return bool(done_ids)
+
+    def _handle_completions(self, host_id: int, t: float) -> None:
+        marked = self._mark_completions(host_id, t)
+        if marked is None:
+            return
+        if marked:
             self._start_jobs(host_id, t)
+        client = self.clients[host_id]
         # report opportunistically (deferred batching handled in _handle_rpc)
         if client.completed and client.should_report(self.server.name, t):
             self._do_rpc(host_id, t, force_report=True)
 
+    def _handle_completions_batch(self, host_ids: List[int], t: float) -> None:
+        """Coalesced same-tick completions: mark every host's finished jobs,
+        run one batched reschedule for the affected hosts, then do the
+        per-host opportunistic report RPCs in the original event order (the
+        same server-visible order as sequential handling — client state is
+        host-local, so deferring the reschedules cannot change outcomes)."""
+        live: List[int] = []
+        to_start: List[int] = []
+        for hid in host_ids:
+            marked = self._mark_completions(hid, t)
+            if marked is None:
+                continue
+            live.append(hid)
+            if marked:
+                to_start.append(hid)
+        self._start_jobs_batch(to_start, t)
+        for hid in live:
+            client = self.clients.get(hid)
+            if client is None:
+                continue
+            if client.completed and client.should_report(self.server.name, t):
+                self._do_rpc(hid, t, force_report=True)
+
     def _start_jobs(self, host_id: int, t: float) -> None:
-        client = self.clients[host_id]
-        chosen = client.schedule(t)
-        running = self.running[host_id]
-        for cj in chosen:
-            if cj.instance_id not in running:
-                running[cj.instance_id] = _RunningJob(
-                    client_job=cj,
-                    actual_total=self._instance_meta[cj.instance_id][1],
-                    started_at=t,
-                )
-        self._reschedule_completions(host_id, t)
+        self._start_jobs_batch([host_id], t)
+
+    def _start_jobs_batch(self, host_ids: List[int], t: float) -> None:
+        if not host_ids:
+            return
+        clients = [self.clients[h] for h in host_ids]
+        if self.batch_clients and len(clients) > 1:
+            chosen_lists = self.client_engine.schedule_batch(clients, t)
+        else:
+            chosen_lists = [c.schedule(t) for c in clients]
+        for host_id, chosen in zip(host_ids, chosen_lists):
+            running = self.running[host_id]
+            for cj in chosen:
+                if cj.instance_id not in running:
+                    running[cj.instance_id] = _RunningJob(
+                        client_job=cj,
+                        actual_total=self._instance_meta[cj.instance_id][1],
+                        started_at=t,
+                    )
+            self._reschedule_completions(host_id, t)
 
     # -- RPC path --
 
@@ -439,31 +515,57 @@ class GridSimulation:
         self._apply_reply(host_id, request, reply, t)
 
     def _handle_rpc_batch(self, host_ids: List[int], t: float) -> None:
-        """Coalesced form of ``_handle_rpc``: build every host's request,
-        dispatch them in one ``rpc_batch`` call, then apply replies in the
-        same order the sequential loop would have."""
+        """Coalesced form of ``_handle_rpc``: build every host's request
+        (work-fetch decisions precomputed in one fused WRR pass over the
+        whole batch), dispatch them in one ``rpc_batch`` call, apply replies
+        in the same order the sequential loop would have, then run one
+        batched reschedule for every host that received jobs."""
+        needs_map: Dict[int, Dict[ResourceType, "ResourceRequest"]] = {}
+        if self.batch_clients:
+            avail = [
+                hid
+                for hid in host_ids
+                if hid in self.specs and self.available.get(hid, False)
+            ]
+            if len(avail) > 1:
+                batched = self.client_engine.needs_work_batch(
+                    [self.clients[h] for h in avail], t
+                )
+                needs_map = dict(zip(avail, batched))
         pending: List[Tuple[int, ScheduleRequest]] = []
         for hid in host_ids:
             spec = self.specs.get(hid)
             if spec is None:
                 continue
             if self.available.get(hid, False):
-                request = self._build_request(hid, t)
+                request = self._build_request(hid, t, needs=needs_map.get(hid))
                 if request is not None:
                     pending.append((hid, request))
             self._push(t + spec.rpc_poll, _RPC, hid)
         replies = self.server.rpc_batch([r for _, r in pending], t)
-        for (hid, request), reply in zip(pending, replies):
-            self._apply_reply(hid, request, reply, t)
+        if self.batch_clients:
+            to_start = [
+                hid
+                for (hid, request), reply in zip(pending, replies)
+                if self._apply_reply(hid, request, reply, t, start=False)
+            ]
+            self._start_jobs_batch(to_start, t)
+        else:
+            for (hid, request), reply in zip(pending, replies):
+                self._apply_reply(hid, request, reply, t)
 
     def _build_request(
-        self, host_id: int, t: float, force_report: bool = False
+        self,
+        host_id: int,
+        t: float,
+        force_report: bool = False,
+        needs: Optional[Dict[ResourceType, ResourceRequest]] = None,
     ) -> Optional[ScheduleRequest]:
         spec = self.specs[host_id]
         client = self.clients[host_id]
         host = spec.host
 
-        fetch = client.choose_fetch_project(t)
+        fetch = client.choose_fetch_project(t, needs=needs)
         reqs: Dict[ResourceType, ResourceRequest] = {}
         if fetch is not None and fetch.project == self.server.name:
             reqs = fetch.requests
@@ -487,11 +589,20 @@ class GridSimulation:
             self.metrics.rpcs_requesting_work += 1
         return request
 
-    def _apply_reply(self, host_id: int, request: ScheduleRequest, reply, t: float) -> None:
+    def _apply_reply(
+        self,
+        host_id: int,
+        request: ScheduleRequest,
+        reply,
+        t: float,
+        start: bool = True,
+    ) -> bool:
+        """Apply one scheduler reply; returns True when jobs arrived.
+        ``start=False`` defers the reschedule to a batched pass."""
         spec = self.specs.get(host_id)
         client = self.clients.get(host_id)
         if spec is None or client is None:
-            return
+            return False
         host = spec.host
         reqs = request.requests
         proj = client.projects.get(self.server.name)
@@ -518,11 +629,13 @@ class GridSimulation:
                 est_flop_count=dj.job.est_flop_count,
                 deadline=dj.instance.deadline,
                 est_wss=dj.job.ram_bytes,
+                received_time=t,
             )
             client.jobs.append(cj)
             self._instance_meta[cj.instance_id] = (dj.version.id, actual)
-        if reply.jobs:
+        if reply.jobs and start:
             self._start_jobs(host_id, t)
+        return bool(reply.jobs)
 
     def _draw_runtime(self, spec: HostSpec, est_flop_count: float, usage: Dict[ResourceType, float]) -> float:
         pf = spec.host.peak_flops(usage)

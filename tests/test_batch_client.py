@@ -1,0 +1,418 @@
+"""Batch/scalar client-engine parity (§6.1–6.2, §9).
+
+``BatchClientEngine`` is specified to be *bit-exact* with the scalar
+oracle: same deadline-miss sets, same shortfall/idle/queue-duration/
+saturation floats, same run sets (content, order, and applied state
+transitions), and same work requests. These tests build twin client
+populations — feature-dense: GPUs, multiple projects with debited REC
+balances, RAM caps, preempted/running states, non-CPU-intensive jobs,
+infinite remaining estimates — drive one through the scalar path and one
+through the engine, and compare exhaustively. Simulator-level tests assert
+that a ``batch_clients=True`` simulation is *identical* (metrics, client
+queues, REC accounting) to the scalar per-host path.
+"""
+import random
+
+import pytest
+
+from repro.core import (
+    App,
+    AppVersion,
+    BatchClientEngine,
+    Job,
+    Platform,
+    ProjectServer,
+    ResourceType,
+    default_cpu_plan_class,
+    next_id,
+    reset_ids,
+)
+from repro.core.client import (
+    Client,
+    ClientJob,
+    ClientPrefs,
+    ClientResource,
+    ProjectAttachment,
+    RunState,
+    wrr_simulate,
+)
+from repro.core.simulator import GridSimulation, make_population
+
+CPU, GPU = ResourceType.CPU, ResourceType.GPU
+
+
+def make_clients(n, seed, max_jobs=12, allow_inf=True):
+    """Feature-dense random population: heterogeneous resources, two
+    projects with unequal shares and debited balances, mixed job states,
+    RAM-heavy working sets, GPU jobs, non-CPU-intensive jobs, and (when
+    ``allow_inf``) jobs with est_flops == 0 (infinite remaining)."""
+    rng = random.Random(seed)
+    clients = []
+    for h in range(n):
+        res = {CPU: ClientResource(CPU, rng.choice([1, 2, 4, 8]), rng.uniform(1e9, 4e10))}
+        if rng.random() < 0.4:
+            res[GPU] = ClientResource(GPU, rng.choice([1, 2]), 1e12)
+        c = Client(
+            host_id=h + 1,
+            resources=res,
+            prefs=ClientPrefs(
+                buffer_lo_days=rng.choice([0.02, 0.1]),
+                buffer_hi_days=rng.choice([0.1, 0.5]),
+            ),
+            ram_bytes=rng.choice([1e9, 4e9, 8e9]),
+        )
+        c.attach(ProjectAttachment(name="p", resource_share=100.0))
+        if rng.random() < 0.5:
+            c.attach(ProjectAttachment(name="q", resource_share=rng.choice([50.0, 300.0])))
+            if rng.random() < 0.5:
+                c.rec.debit("p", rng.uniform(0, 1e5), 0.0)
+        flops_choices = [1e9, 2e10] + ([0.0] if allow_inf else [])
+        for i in range(rng.randrange(0, max_jobs)):
+            usage = {CPU: rng.choice([0.5, 1.0, 2.0])}
+            if GPU in res and rng.random() < 0.4:
+                usage[GPU] = 1.0
+            proj = "q" if ("q" in c.projects and rng.random() < 0.5) else "p"
+            c.jobs.append(ClientJob(
+                instance_id=h * 1000 + i,
+                job_id=h * 1000 + i,
+                project=proj,
+                app_name="a",
+                usage=usage,
+                est_flops=rng.choice(flops_choices),
+                est_flop_count=rng.uniform(1e11, 5e13),
+                deadline=rng.uniform(0.0, 2 * 86400.0),
+                est_wss=rng.choice([0.0, 0.5e9, 2e9]),
+                fraction_done=rng.choice([0.0, 0.3, 0.99]),
+                fraction_done_exact=rng.random() < 0.3,
+                runtime=rng.uniform(0, 3600),
+                state=rng.choice([
+                    RunState.UNSTARTED, RunState.RUNNING,
+                    RunState.PREEMPTED, RunState.DONE,
+                ]),
+                slice_start=rng.uniform(0, 1000),
+                checkpoint_time=rng.uniform(0, 1000),
+                non_cpu_intensive=rng.random() < 0.1,
+            ))
+        clients.append(c)
+    return clients
+
+
+def _assert_wrr_equal(sa, sb, host_id):
+    assert sa.deadline_misses == sb.deadline_misses, host_id
+    assert sa.shortfall == sb.shortfall, host_id
+    assert sa.idle_instances == sb.idle_instances, host_id
+    assert sa.queue_dur == sb.queue_dur, host_id
+    assert sa.saturated_until == sb.saturated_until, host_id
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_wrr_batch_matches_scalar(seed):
+    """Engine WRR pass == per-host wrr_simulate: identical miss id lists and
+    exact float equality on every per-resource output."""
+    now = 500.0
+    A = make_clients(120, seed, allow_inf=False)
+    B = make_clients(120, seed, allow_inf=False)
+    sims_b = BatchClientEngine().wrr_batch(B, now)
+    for c, sb in zip(A, sims_b):
+        queued = [j for j in c.jobs if j.state != RunState.DONE]
+        prio = c.project_priorities(now)
+        sa = wrr_simulate(queued, c.resources, prio, c.prefs, now, c.ram_bytes)
+        _assert_wrr_equal(sa, sb, c.host_id)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_schedule_batch_matches_scalar(seed):
+    """Engine run-set selection == Client.schedule: same chosen jobs in the
+    same order, same run/preempt transitions, same slice_start stamps, and
+    same deadline-miss flags across the whole queue."""
+    now = 500.0
+    A = make_clients(120, seed + 50, allow_inf=False)
+    B = make_clients(120, seed + 50, allow_inf=False)
+    runs_a = [c.schedule(now) for c in A]
+    runs_b = BatchClientEngine().schedule_batch(B, now)
+    for ca, cb, ra, rb in zip(A, B, runs_a, runs_b):
+        sig = lambda js: [(j.instance_id, j.state, j.slice_start, j.deadline_miss) for j in js]  # noqa: E731
+        assert sig(ra) == sig(rb), ca.host_id
+        assert sig(ca.jobs) == sig(cb.jobs), ca.host_id
+        assert sig(ca.running) == sig(cb.running), ca.host_id
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_needs_and_fetch_match_scalar(seed):
+    """Work requests (shortfall/idle/queue-dur floats) and fetch-project
+    decisions identical between engine and scalar path."""
+    now = 500.0
+    A = make_clients(120, seed + 100, allow_inf=False)
+    B = make_clients(120, seed + 100, allow_inf=False)
+    eng = BatchClientEngine()
+    needs_b = eng.needs_work_batch(B, now)
+    for ca, nb in zip(A, needs_b):
+        assert ca.needs_work(now) == nb, ca.host_id
+    A2 = make_clients(80, seed + 150, allow_inf=False)
+    B2 = make_clients(80, seed + 150, allow_inf=False)
+    fetch_b = BatchClientEngine().choose_fetch_batch(B2, now)
+    for ca, fb in zip(A2, fetch_b):
+        fa = ca.choose_fetch_project(now)
+        assert (fa is None) == (fb is None), ca.host_id
+        if fa is not None:
+            assert fa.project == fb.project and fa.requests == fb.requests
+
+
+def test_tick_batch_matches_sequential_tick():
+    """tick_batch (one fused WRR pass shared by reschedule + work fetch)
+    == scalar schedule() followed by needs_work()."""
+    now = 1234.0
+    A = make_clients(100, 7, allow_inf=False)
+    B = make_clients(100, 7, allow_inf=False)
+    runs_b, needs_b = BatchClientEngine().tick_batch(B, now)
+    for ca, rb, nb in zip(A, runs_b, needs_b):
+        ra = ca.schedule(now)
+        na = ca.needs_work(now)
+        assert [(j.instance_id, j.state) for j in ra] == [
+            (j.instance_id, j.state) for j in rb
+        ]
+        assert na == nb
+
+
+def test_parity_with_infinite_estimates():
+    """Jobs with est_flops == 0 have infinite remaining estimates — the
+    scalar oracle spins its event cap through inf/NaN arithmetic, and the
+    engine must reproduce its Python min/max NaN semantics exactly (small
+    population: the degenerate spin costs 10k events per host)."""
+    now = 500.0
+    A = make_clients(12, 31, max_jobs=6, allow_inf=True)
+    B = make_clients(12, 31, max_jobs=6, allow_inf=True)
+    eng = BatchClientEngine()
+    sims_b = eng.wrr_batch(B, now)
+    for c, sb in zip(A, sims_b):
+        queued = [j for j in c.jobs if j.state != RunState.DONE]
+        prio = c.project_priorities(now)
+        sa = wrr_simulate(queued, c.resources, prio, c.prefs, now, c.ram_bytes)
+        _assert_wrr_equal(sa, sb, c.host_id)
+    runs_a = [c.schedule(now) for c in A]
+    runs_b = BatchClientEngine().schedule_batch(B, now)
+    for ca, ra, rb in zip(A, runs_a, runs_b):
+        assert [j.instance_id for j in ra] == [j.instance_id for j in rb]
+
+
+def test_schedule_batch_empty_queue_accrual_parity():
+    """Client.schedule early-returns *before* the REC priority accrual on an
+    empty queue; schedule_batch must mirror that (an accrual at an
+    intermediate time changes float association and can diverge balances),
+    while needs_work accrues unconditionally on both paths."""
+    def mk():
+        c = Client(host_id=1, resources={CPU: ClientResource(CPU, 2, 1e9)})
+        c.attach(ProjectAttachment(name="p"))
+        return c
+
+    a, b = mk(), mk()
+    a.schedule(0.8)
+    BatchClientEngine().schedule_batch([b], 0.8)
+    assert a.rec.accounts["p"].last_update == b.rec.accounts["p"].last_update
+    assert a.project_priorities(600.9) == b.project_priorities(600.9)
+
+    a2, b2 = mk(), mk()
+    a2.needs_work(0.8)
+    BatchClientEngine().needs_work_batch([b2], 0.8)
+    assert a2.rec.accounts["p"].last_update == b2.rec.accounts["p"].last_update
+    assert a2.project_priorities(600.9) == b2.project_priorities(600.9)
+
+
+def test_engine_edge_cases():
+    """Empty populations, empty queues, all-DONE queues, GPU-only jobs on a
+    CPU-only host, and the non-CPU-intensive override."""
+    eng = BatchClientEngine()
+    assert eng.wrr_batch([], 0.0) == []
+    assert eng.schedule_batch([], 0.0) == []
+
+    c = Client(host_id=1, resources={CPU: ClientResource(CPU, 2, 1e9)})
+    c.attach(ProjectAttachment(name="p"))
+    # all-DONE queue behaves like an empty one
+    done = ClientJob(instance_id=1, job_id=1, project="p", app_name="a",
+                     usage={CPU: 1.0}, est_flops=1e9, est_flop_count=1e12,
+                     deadline=1e9, state=RunState.DONE)
+    gpu_only = ClientJob(instance_id=2, job_id=2, project="p", app_name="a",
+                         usage={GPU: 1.0}, est_flops=1e9, est_flop_count=1e12,
+                         deadline=1e9)
+    nci = ClientJob(instance_id=3, job_id=3, project="p", app_name="a",
+                    usage={CPU: 4.0}, est_flops=1e9, est_flop_count=1e12,
+                    deadline=1e9, non_cpu_intensive=True)
+    c.jobs = [done, gpu_only, nci]
+    twin = Client(host_id=1, resources={CPU: ClientResource(CPU, 2, 1e9)})
+    twin.attach(ProjectAttachment(name="p"))
+    import copy
+    twin.jobs = copy.deepcopy(c.jobs)
+
+    (run_b,), (needs_b,) = eng.tick_batch([c], 0.0)
+    run_a = twin.schedule(0.0)
+    needs_a = twin.needs_work(0.0)
+    assert [j.instance_id for j in run_a] == [j.instance_id for j in run_b]
+    # the non-CPU-intensive job always runs (§3.5); the GPU job can't
+    assert [j.instance_id for j in run_b] == [3]
+    assert needs_a == needs_b
+
+
+def test_property_wrr_parity_random_queues():
+    """Property (hypothesis): scalar wrr_simulate and the batched engine
+    agree on miss sets and shortfalls across random queues."""
+    pytest.importorskip("hypothesis")  # optional dep: see requirements-dev.txt
+    from hypothesis import given, settings, strategies as st
+
+    job_st = st.tuples(
+        st.floats(min_value=0.0, max_value=2e10),   # est_flops (0 => inf rem)
+        st.floats(min_value=1e9, max_value=5e13),   # est_flop_count
+        st.floats(min_value=0.0, max_value=1.0),    # fraction_done
+        st.booleans(),                              # fraction_done_exact
+        st.floats(min_value=0.0, max_value=7200.0),  # runtime
+        st.floats(min_value=0.0, max_value=2e5),    # deadline
+        st.sampled_from([0.5, 1.0, 2.0]),           # cpu usage
+        st.booleans(),                              # uses gpu
+        st.sampled_from([0.0, 0.5e9, 2e9]),         # est_wss
+        st.sampled_from([RunState.UNSTARTED, RunState.RUNNING, RunState.DONE]),
+    )
+    host_st = st.tuples(
+        st.lists(job_st, max_size=8),
+        st.integers(min_value=1, max_value=8),      # ncpus
+        st.booleans(),                              # has gpu resource
+        st.sampled_from([1e9, 8e9]),                # ram
+    )
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.lists(host_st, max_size=12))
+    def check(hosts):
+        def build():
+            out = []
+            for h, (jobs, ncpus, has_gpu, ram) in enumerate(hosts):
+                res = {CPU: ClientResource(CPU, ncpus, 1e9)}
+                if has_gpu:
+                    res[GPU] = ClientResource(GPU, 1, 1e12)
+                c = Client(host_id=h + 1, resources=res, ram_bytes=ram)
+                c.attach(ProjectAttachment(name="p"))
+                for i, (ef, efc, fd, ex, rt, dl, cu, ug, wss, state) in enumerate(jobs):
+                    usage = {CPU: cu}
+                    if ug:
+                        usage[GPU] = 1.0
+                    c.jobs.append(ClientJob(
+                        instance_id=h * 100 + i, job_id=h * 100 + i,
+                        project="p", app_name="a", usage=usage,
+                        est_flops=ef, est_flop_count=efc, deadline=dl,
+                        est_wss=wss, fraction_done=fd,
+                        fraction_done_exact=ex, runtime=rt, state=state,
+                    ))
+                out.append(c)
+            return out
+
+        A, B = build(), build()
+        sims_b = BatchClientEngine().wrr_batch(B, 100.0)
+        for c, sb in zip(A, sims_b):
+            queued = [j for j in c.jobs if j.state != RunState.DONE]
+            prio = c.project_priorities(100.0)
+            sa = wrr_simulate(queued, c.resources, prio, c.prefs, 100.0, c.ram_bytes)
+            assert set(sa.deadline_misses) == set(sb.deadline_misses)
+            assert sa.shortfall == sb.shortfall
+            assert sa.idle_instances == sb.idle_instances
+
+    check()
+
+
+# ---------------------------------------------------------------------------
+# simulator integration
+# ---------------------------------------------------------------------------
+
+
+def _sim(batch_clients, n_hosts=24, n_jobs=80, seed=4, **pop_kw):
+    reset_ids()
+    server = ProjectServer(name="p", cache_size=64)
+    app = App(name="work", min_quorum=1, init_ninstances=1, delay_bound=6 * 3600.0)
+    for osn in ("windows", "mac", "linux"):
+        app.add_version(
+            AppVersion(
+                id=next_id("appver"),
+                app_name="work",
+                platform=Platform(osn, "x86_64"),
+                version_num=1,
+                plan_class=default_cpu_plan_class(),
+            )
+        )
+    server.add_app(app)
+    for i in range(n_jobs):
+        server.submit_job(
+            Job(id=next_id("job"), app_name="work", est_flop_count=1e12), 0.0
+        )
+    pop = make_population(n_hosts, seed=seed, **pop_kw)
+    return GridSimulation(server, pop, seed=seed, batch_clients=batch_clients)
+
+
+def _client_sig(sim):
+    out = {}
+    for hid, c in sorted(sim.clients.items()):
+        out[hid] = (
+            sorted((j.instance_id, j.state, j.deadline_miss) for j in c.jobs),
+            sorted(j.instance_id for j in c.completed),
+            {n: a.total_used for n, a in c.rec.accounts.items()},
+        )
+    return out
+
+
+def test_simulator_rpc_batch_with_batch_clients():
+    """Driving _handle_rpc_batch with the client engine on must leave the
+    server store and every client's queue identical to the scalar path."""
+    sim_a = _sim(False)
+    sim_b = _sim(True)
+    ids = list(sim_a.clients.keys())
+    sim_a._handle_rpc_batch(ids, 0.0)
+    sim_b._handle_rpc_batch(ids, 0.0)
+    assert _client_sig(sim_a) == _client_sig(sim_b)
+    assert sim_a.metrics.rpcs == sim_b.metrics.rpcs
+    assert sim_a.metrics.rpcs_with_work == sim_b.metrics.rpcs_with_work
+
+
+def test_simulator_completion_batching():
+    """_handle_completions_batch == per-host _handle_completions at the same
+    virtual time (completion marking, batched reschedule, report RPCs)."""
+    sim_a = _sim(False, seed=9)
+    sim_b = _sim(True, seed=9)
+    ids = list(sim_a.clients.keys())
+    sim_a._handle_rpc_batch(ids, 0.0)
+    sim_b._handle_rpc_batch(ids, 0.0)
+    # fast-forward every running job to completion at a shared tick
+    for sim in (sim_a, sim_b):
+        for running in sim.running.values():
+            for rj in running.values():
+                rj.accrued = rj.actual_total
+    t = 3600.0
+    for hid in ids:
+        sim_a._handle_completions(hid, t)
+    sim_b._handle_completions_batch(ids, t)
+    assert _client_sig(sim_a) == _client_sig(sim_b)
+    assert sim_a.metrics.instances_executed == sim_b.metrics.instances_executed
+    assert sim_a.metrics.rpcs == sim_b.metrics.rpcs
+
+
+def test_whole_simulation_metrics_parity_500_hosts():
+    """Acceptance: end-of-run simulation metrics identical between the
+    scalar client path and the batched engine at a 500-host population."""
+    n_jobs = 1200
+    sim_a = _sim(False, n_hosts=500, n_jobs=n_jobs, gpu_fraction=0.25,
+                 availability=0.9)
+    sim_b = _sim(True, n_hosts=500, n_jobs=n_jobs, gpu_fraction=0.25,
+                 availability=0.9)
+    ma = sim_a.run(6 * 3600.0)
+    mb = sim_b.run(6 * 3600.0)
+    sim_a.audit_validation()
+    sim_b.audit_validation()
+    assert ma == mb
+    assert _client_sig(sim_a) == _client_sig(sim_b)
+
+
+def test_simulation_to_completion_with_batch_clients():
+    """A batch-client simulation still drives every job to completion and
+    REC debits accrue (the §6.1 accounting fix)."""
+    sim = _sim(True, n_hosts=16, n_jobs=60)
+    metrics = sim.run(12 * 3600.0)
+    assert metrics.instances_executed == 60
+    assert len(sim.server.assimilated_outputs) == 60
+    total_used = sum(
+        a.total_used for c in sim.clients.values() for a in c.rec.accounts.values()
+    )
+    assert total_used > 0.0

@@ -351,3 +351,116 @@ class TestTrickleUp:
         )
         key = f"host:{host.id}:partial"
         assert server.credit.total.get(key, 0.0) == pytest.approx(0.25)
+
+
+# ---------------------------------------------------------------------------
+# client accounting bugfix regressions (PR 3)
+# ---------------------------------------------------------------------------
+
+
+class TestClientAccountingFixes:
+    def test_simulator_debits_rec_and_priorities_diverge(self):
+        """Regression: GridSimulation._advance_running bypassed rec.debit,
+        freezing §6.1 project priorities at their initial resource-share
+        values. With the fix, the served project's balance is drawn down:
+        despite a 3× larger share, its priority ends *below* an idle
+        project's."""
+        from repro.core.simulator import GridSimulation, make_population
+
+        reset_ids()
+        server = ProjectServer(name="p", purge_delay=1e18)
+        app = App(name="a", min_quorum=1, init_ninstances=1, delay_bound=6 * 3600.0)
+        for osn in ("windows", "mac", "linux"):
+            app.add_version(
+                AppVersion(
+                    id=next_id("appver"),
+                    app_name="a",
+                    platform=Platform(osn, "x86_64"),
+                    version_num=1,
+                    plan_class=default_cpu_plan_class(),
+                )
+            )
+        server.add_app(app)
+        for _ in range(40):
+            server.submit_job(
+                Job(id=next_id("job"), app_name="a", est_flop_count=4e13), 0.0
+            )
+        pop = make_population(2, seed=1)
+        sim = GridSimulation(server, pop, seed=1)
+        # attach a second, idle project with a *smaller* share to every host
+        for c in sim.clients.values():
+            c.attach(ProjectAttachment(name="other", resource_share=100.0 / 3.0))
+        sim.run(8 * 3600.0)
+        busy = [c for c in sim.clients.values()
+                if c.rec.accounts["p"].total_used > 0.0]
+        assert busy, "no host ever ran work"
+        for c in busy:
+            prio = c.project_priorities(sim.now)
+            # without debiting, p (3x the share => 3x the accrual rate)
+            # would always outrank the idle project
+            assert prio["p"] < prio["other"]
+
+    def test_wrr_pending_rebuild_by_instance_id(self):
+        """Regression: the per-event pending rebuild used `j not in done_now`
+        (O(n^2) list membership through dataclass __eq__). Distinct job
+        objects with equal fields must still all be simulated: both
+        contribute queue duration and finish."""
+        c = make_client(ncpus=2)
+        twin_a = cjob(1, est_s=3600.0, deadline=1e9)
+        twin_b = cjob(2, est_s=3600.0, deadline=1e9)
+        # make the *non-identity* fields equal; ids differ so remaining-time
+        # bookkeeping stays per-job
+        sim = wrr_simulate(
+            [twin_a, twin_b], c.resources, {"p": 0.0}, c.prefs, 0.0
+        )
+        assert sim.deadline_misses == []
+        assert sim.queue_dur[ResourceType.CPU] == pytest.approx(7200.0)
+        # a long queue with equal-field jobs terminates in O(events) and
+        # leaves no job unsimulated
+        jobs = [cjob(i, est_s=600.0, deadline=1e9) for i in range(40)]
+        sim = wrr_simulate(jobs, c.resources, {"p": 0.0}, c.prefs, 0.0)
+        assert sim.deadline_misses == []
+        assert sim.queue_dur[ResourceType.CPU] == pytest.approx(40 * 600.0)
+
+    def test_detach_purges_completed_reported_and_rec(self):
+        """Regression: detach leaked the project's completed /
+        reported_pending entries and its REC allocator row (which kept
+        accruing balance and skewing the remaining projects' priorities)."""
+        c = make_client()
+        c.attach(ProjectAttachment(name="q", resource_share=300.0))
+        done_p = cjob(1)
+        done_p.state = RunState.DONE
+        done_q = cjob(2, project="q")
+        done_q.state = RunState.DONE
+        c.completed = [done_p, done_q]
+        c.reported_pending = [cjob(3), cjob(4, project="q")]
+        c.jobs = [cjob(5), cjob(6, project="q")]
+        c.detach("p")
+        assert "p" not in c.projects
+        assert [j.project for j in c.completed] == ["q"]
+        assert [j.project for j in c.reported_pending] == ["q"]
+        assert all(j.project == "q" for j in c.jobs)
+        assert "p" not in c.rec.accounts
+        # the remaining project re-absorbs the freed resource share
+        assert c.rec.accounts["q"].rate == pytest.approx(1.0)
+
+    def test_should_report_window_is_relative(self):
+        """Regression: the report-batching deadline test compared against
+        0.1 x the *absolute* virtual-time deadline, so late in long runs
+        every completion reported immediately (§6.2 batching silently
+        degraded). The window must derive from the job's own deadline
+        allowance."""
+        c = make_client()
+        late = 2_000_000.0  # deep into a long simulation
+        done = cjob(1, deadline=late + 86400.0)
+        done.state = RunState.DONE
+        done.received_time = late
+        c.completed = [done]
+        # old behaviour: (soonest - now) < 0.1 * soonest  =>  report now
+        assert (done.deadline - late) < 0.1 * done.deadline
+        assert not c.should_report("p", late)  # fixed: batch, deadline is far
+        # the relative window still flushes near the deadline
+        assert c.should_report("p", done.deadline - 3600.0)
+        window = max(3600.0, 0.1 * 86400.0)
+        assert c.should_report("p", done.deadline - window + 1.0)
+        assert not c.should_report("p", done.deadline - window - 1.0)
