@@ -6,7 +6,8 @@ and their paper sections:
   bench_dispatch    S5.1/[17]  hundreds of dispatches per second; fast batch submit
   bench_daemons     S5.1       indexed store: O(dirty) daemon passes at 1M-job backlogs
   bench_clients     S6.1-6.2   vectorized host-population client engine vs scalar ticks
-  bench_validation  S3.4       adaptive replication: overhead -> ~1, bounded errors
+  bench_validation  S3.4/S7    vectorized validation engine vs scalar check_set
+                               passes; adaptive replication: overhead -> ~1
   bench_allocation  S3.9       linear-bounded model minimizes small-batch turnaround
   bench_scheduling  S6.1       EDF override avoids WRR deadline misses
   bench_workfetch   S6.2       buffering bounds RPC rate

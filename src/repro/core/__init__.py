@@ -6,8 +6,9 @@ Layout (paper section in parens):
   keywords     — keyword hierarchies & prefs (§2.4)
   store        — the job database + ID-space daemon sharding (§5.1)
   fsm          — transitioner: job lifecycle FSM (§4)
-  validator    — replication validation, HR classes (§3.4)
-  adaptive     — adaptive replication reputations (§3.4)
+  validator    — replication validation, HR classes, payload digests (§3.4)
+  adaptive     — adaptive replication reputations, array-backed (§3.4)
+  batch_validate — vectorized validation→credit→reputation engine (§3.4, §7)
   estimation   — runtime estimation / proj_flops (§6.3)
   credit       — PFC credit + normalizations + cross-project (§7)
   allocation   — linear-bounded allocation model (§3.9)
@@ -23,6 +24,7 @@ from .allocation import LinearBoundedAllocator
 from .backoff import ExponentialBackoff
 from .batch_client import BatchClientEngine
 from .batch_dispatch import BatchDispatchEngine
+from .batch_validate import BatchValidationEngine
 from .client import Client, ClientJob, ClientPrefs, ClientResource, ProjectAttachment
 from .coordinator import AMReply, Coordinator, VettedProject
 from .credit import CreditSystem, peak_flop_count
@@ -63,7 +65,13 @@ from .types import (
     next_id,
     reset_ids,
 )
-from .validator import bitwise_equal, check_set, fuzzy_comparator
+from .validator import (
+    bitwise_digest_batch,
+    bitwise_equal,
+    check_set,
+    digest_batch_for,
+    fuzzy_comparator,
+)
 
 __all__ = [
     "AdaptiveReplication",
@@ -72,6 +80,7 @@ __all__ = [
     "Batch",
     "BatchClientEngine",
     "BatchDispatchEngine",
+    "BatchValidationEngine",
     "Candidate",
     "Client",
     "ClientJob",
@@ -107,9 +116,11 @@ __all__ = [
     "Scheduler",
     "Transitioner",
     "ValidateState",
+    "bitwise_digest_batch",
     "bitwise_equal",
     "check_set",
     "default_cpu_plan_class",
+    "digest_batch_for",
     "fuzzy_comparator",
     "gpu_plan_class",
     "hr_class",

@@ -19,6 +19,7 @@ volunteer's credit over projects via stable cross-project IDs (CPIDs).
 from __future__ import annotations
 
 import hashlib
+import math
 from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, Optional, Tuple
 
@@ -108,13 +109,116 @@ class CreditSystem:
     @staticmethod
     def grant_amount(claimed: List[float]) -> float:
         """Outlier-robust combination of claimed credits (§7): drop the
-        high/low extremes when >2 claims, then average."""
-        vals = sorted(c for c in claimed if c > 0)
+        high/low extremes when >2 claims, then average.
+
+        A claim of exactly zero is legitimate (a valid instance whose PFC
+        happened to be zero — e.g. a non-CPU-intensive app) and belongs in
+        the trim set; only *negative* values are unset/error sentinels and
+        are excluded. (The old ``c > 0`` filter silently dropped zero
+        claims from the trim, skewing the average upward, and fell through
+        to the empty-claims 0.0 fallback when every claim was zero.)
+        """
+        vals = sorted(c for c in claimed if c >= 0.0)
         if not vals:
             return 0.0
         if len(vals) > 2:
             vals = vals[1:-1]
         return sum(vals) / len(vals)
+
+    def ingest_batch(
+        self,
+        entries: List[Tuple[Job, List[JobInstance], List[int]]],
+    ) -> List[float]:
+        """Batched stats ingestion for the batch validation engine (§7).
+
+        For every ``(job, valid_instances, peer_version_ids)`` entry — in
+        order — records the PFC sample and computes claimed credit for each
+        instance (setting ``instance.claimed_credit``), then returns the
+        per-job grant amounts. The float operations and their order are
+        *identical* to the scalar ``record()`` / ``claimed_credit()`` /
+        ``grant_amount()`` sequence, so engine and oracle grant bit-equal
+        credit; the batching win is hoisted lookups and no per-call
+        ``setdefault`` allocations across the tick's whole validated set.
+        """
+        vstats = self.version_stats
+        hvstats = self.host_version_stats
+        ms = self.min_samples
+        grants: List[float] = []
+        # scanning a version's own entry can never lower ``best`` below its
+        # own mean, so the peer scan only needs the *other* versions
+        others_cache: Dict[Tuple[int, Optional[int]], List[int]] = {}
+        for job, valid, peers in entries:
+            est = job.est_flop_count
+            claims: List[float] = []
+            for inst in valid:
+                pfc = inst.peak_flop_count
+                vid = inst.app_version_id
+                hid = inst.host_id
+                vstat = vstats.get(vid)
+                hkey = (hid, vid)
+                hstat = hvstats.get(hkey)
+                if est > 0 and pfc > 0:
+                    x = pfc / est
+                    if vstat is None:
+                        vstat = vstats[vid] = OnlineStats()
+                    vstat.n = n = vstat.n + 1
+                    delta = x - vstat.mean
+                    vstat.mean += delta / n
+                    vstat._m2 += delta * (x - vstat.mean)
+                    if hstat is None:
+                        hstat = hvstats[hkey] = OnlineStats()
+                    hstat.n = n = hstat.n + 1
+                    delta = x - hstat.mean
+                    hstat.mean += delta / n
+                    hstat._m2 += delta * (x - hstat.mean)
+                # inlined claimed_credit (same op order: pfc*vn, *hn, /scale)
+                c = pfc
+                if vstat is not None and vstat.n >= ms and vstat.mean > 0:
+                    okey = (id(peers), vid)
+                    others = others_cache.get(okey)
+                    if others is None:
+                        others = others_cache[okey] = [p for p in peers if p != vid]
+                    best = vstat.mean
+                    for pid in others:
+                        stp = vstats.get(pid)
+                        if stp is not None and stp.n >= ms and 0 < stp.mean < best:
+                            best = stp.mean
+                    c *= best / vstat.mean
+                if not (
+                    hstat is None or vstat is None
+                    or hstat.n < ms or vstat.n < ms
+                    or hstat.mean <= 0 or vstat.mean <= 0
+                ):
+                    c *= vstat.mean / hstat.mean
+                c = c / COBBLESTONE_SCALE
+                inst.__dict__["claimed_credit"] = c  # untracked field
+                claims.append(c)
+            grants.append(self.grant_amount(claims))
+        return grants
+
+    def grant_many(self, by_key: Dict[str, List[float]], now: float) -> None:
+        """Replay one tick's grants grouped per key, in per-key event order.
+
+        Float-identical to calling :meth:`grant` once per amount at the
+        same ``now``: only a key's own sequence touches its accumulators,
+        so grouping by key cannot change any result — the first grant
+        applies the decay, the rest add (``now == last`` after the first).
+        """
+        total = self.total
+        recent = self.recent
+        recent_t = self._recent_t
+        for key, amounts in by_key.items():
+            t = total.get(key, 0.0)
+            last = recent_t.get(key)
+            prev = recent.get(key, 0.0)
+            if last is not None and now > last:
+                prev *= math.exp(-(now - last) / self.recent_tau)
+            for a in amounts:
+                t += a
+                prev += a
+            total[key] = t
+            recent[key] = prev
+            recent_t[key] = now
 
     def grant(self, key: str, amount: float, now: float = 0.0) -> None:
         """Credit a host/volunteer/team accounting key."""
@@ -123,8 +227,6 @@ class CreditSystem:
         last = self._recent_t.get(key)
         prev = self.recent.get(key, 0.0)
         if last is not None and now > last:
-            import math
-
             decay = math.exp(-(now - last) / self.recent_tau)
             prev *= decay
         self.recent[key] = prev + amount

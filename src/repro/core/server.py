@@ -48,6 +48,10 @@ class ProjectServer:
     cache_size: int = 1024
     n_scheduler_instances: int = 1
     n_daemon_instances: int = 1
+    # route the transitioners' validate pass through the vectorized batch
+    # validation engine (core/batch_validate.py); False selects the scalar
+    # per-job oracle path (the parity reference)
+    batch_validate: bool = True
     purge_delay: float = 0.0  # keep completed rows briefly (§4)
     enabled: DaemonControl = field(default_factory=DaemonControl)
     assimilators: Dict[str, AssimilatorFn] = field(default_factory=dict)
@@ -79,6 +83,7 @@ class ProjectServer:
                 adaptive=self.adaptive,
                 instance=i,
                 n_instances=self.n_daemon_instances,
+                batch_validate=self.batch_validate,
             )
             for i in range(self.n_daemon_instances)
         ]
@@ -158,6 +163,11 @@ class ProjectServer:
             return []
         sched = self.schedulers[self._rr % len(self.schedulers)]
         self._rr += 1
+        # adaptive-replication decisions in this coalesced pass consume one
+        # prefetched RNG batch instead of interleaved per-job draws (§3.4);
+        # the FIFO cache preserves stream order, so every decision is
+        # identical to unbatched use regardless of the estimate's accuracy
+        self.adaptive.prefetch_draws(len(requests))
         return sched.handle_batch(requests, now)
 
     def _handle_trickles(self, request: ScheduleRequest, now: float) -> None:

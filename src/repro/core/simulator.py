@@ -37,6 +37,7 @@ from .types import (
     Platform,
     ProcessingResource,
     ResourceType,
+    ValidateState,
 )
 
 # ---------------------------------------------------------------------------
@@ -706,3 +707,52 @@ class GridSimulation:
         # the audit doubles as the store's index/scan consistency check
         if store.use_indexes:
             store.check_invariants()
+        self._audit_validate_states()
+
+    def _audit_validate_states(self) -> None:
+        """Engine-vs-oracle validation audit: re-check every resident
+        validated job's partition against the scalar comparator.
+
+        Whichever path assigned the states (the batch engine's digest
+        grouping or the scalar ``check_set``), the §3.4/§4 contract holds:
+        the canonical instance is VALID, and every other VALID success
+        matches the canonical under the app comparator (both paths compare
+        members against the winning group's representative). The converse
+        — INVALID implies comparator mismatch with the canonical — is only
+        an invariant for exact (bitwise) comparators: greedy grouping may
+        never have compared an invalid member against the canonical when a
+        fuzzy tolerance relation is non-transitive.
+        """
+        store = self.server.store
+        from .validator import bitwise_equal
+
+        for job in store.jobs.values():
+            if job.canonical_instance_id is None:
+                continue
+            canonical = store.instances.get(job.canonical_instance_id)
+            if canonical is None:
+                continue
+            app = store.apps[job.app_name]
+            cmp = app.comparator or bitwise_equal
+            assert canonical.validate_state == ValidateState.VALID, (
+                f"job {job.id}: canonical instance not VALID"
+            )
+            for inst in store.job_instances(job.id):
+                if (
+                    inst.id == canonical.id
+                    or inst.outcome != InstanceOutcome.SUCCESS
+                ):
+                    continue
+                if inst.validate_state == ValidateState.VALID:
+                    assert cmp(canonical.output, inst.output), (
+                        f"job {job.id}: VALID instance {inst.id} disagrees "
+                        f"with canonical"
+                    )
+                elif (
+                    inst.validate_state == ValidateState.INVALID
+                    and app.comparator is None
+                ):
+                    assert not cmp(canonical.output, inst.output), (
+                        f"job {job.id}: INVALID instance {inst.id} agrees "
+                        f"with canonical (bitwise)"
+                    )

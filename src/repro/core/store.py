@@ -20,7 +20,9 @@ notify the store on field assignment, see ``types.IndexObserved``):
     transitioner's deadline pass pops only expired entries;
   * per-job ``(host, volunteer)`` assignment sets, making the
     one-instance-per-volunteer "slow check" (§6.4) O(1);
-  * per-batch open-job counters replacing the all-jobs ``batch_done`` scan.
+  * per-batch open-job counters replacing the all-jobs ``batch_done`` scan;
+  * a validation-pending set — jobs holding a fresh (OVER/SUCCESS/INIT)
+    instance — consumed by the batch validation engine's digest pass.
 
 The original scan queries (``jobs_with_flag`` & co.) are kept as the
 debug/oracle path: ``use_indexes=False`` routes every daemon query through
@@ -46,6 +48,7 @@ from .types import (
     Job,
     JobInstance,
     JobState,
+    ValidateState,
     next_id,
 )
 
@@ -101,6 +104,14 @@ class JobStore:
     # job_id -> host ids / volunteer ids ever assigned an instance
     _job_hosts: Dict[int, Set[int]] = field(default_factory=dict)
     _job_vols: Dict[int, Set[int]] = field(default_factory=dict)
+    # validation-pending index (§3.4/§4): jobs holding >=1 *fresh* success —
+    # an instance with state OVER, outcome SUCCESS, validate_state INIT.
+    # These are exactly the jobs whose next transition may run the quorum
+    # check; the batch validation engine reads this set to decide which
+    # flagged jobs need the digest pass. Maintained from the per-job fresh
+    # counts below on every tracked-field assignment.
+    validation_pending: Set[int] = field(default_factory=set)
+    _fresh_success: Dict[int, int] = field(default_factory=dict)
 
     def __post_init__(self) -> None:
         for s in JobState:
@@ -262,6 +273,24 @@ class JobStore:
             ids = (j.id for j in self.jobs_with_flag())
         return [self.jobs[j] for j in sorted(shard(ids, instance, n_instances))]
 
+    def pending_validation(self, instance: int = 0, n_instances: int = 1) -> Set[int]:
+        """Job ids (one daemon shard) with at least one fresh success — an
+        OVER/SUCCESS instance whose validate_state is still INIT.
+
+        The batch validation engine intersects this with the flagged-job
+        list to pick the jobs that need the digest pass; the oracle path
+        falls back to a full instance-table scan.
+        """
+        if self.use_indexes:
+            ids: Iterable[int] = self.validation_pending
+        else:
+            ids = {
+                inst.job_id
+                for inst in self.instances.values()
+                if _is_fresh_success(inst)
+            }
+        return set(shard(ids, instance, n_instances))
+
     def pending_assimilation(self) -> List[Job]:
         source = self.assimilate_pending if self.use_indexes else (
             j.id for j in self.jobs_to_assimilate()
@@ -404,6 +433,8 @@ class JobStore:
         self._by_job.pop(jid, None)
         self._job_hosts.pop(jid, None)
         self._job_vols.pop(jid, None)
+        self._fresh_success.pop(jid, None)
+        self.validation_pending.discard(jid)
         job.state = JobState.PURGED
         self.jobs.pop(jid, None)
         self._jobs_by_state[JobState.PURGED].discard(jid)
@@ -430,6 +461,14 @@ class JobStore:
             self._instance_changed(row, name, old, new)
 
     def _job_changed(self, job: Job, name: str, old, new) -> None:
+        if name == "transition_flag":
+            # hot path (every report/clear toggles it): only the
+            # transition-pending set can change
+            _set_membership(
+                self.transition_pending, job.id,
+                new and job.state == JobState.ACTIVE,
+            )
+            return
         if name == "state":
             self._jobs_by_state[old].discard(job.id)
             self._jobs_by_state[new].add(job.id)
@@ -468,6 +507,38 @@ class JobStore:
         _set_membership(self.purge_pending, jid, want_purge)
 
     def _instance_changed(self, inst: JobInstance, name: str, old, new) -> None:
+        # validation-pending maintenance: the freshness predicate depends on
+        # (state, outcome, validate_state); evaluate the before/after pair
+        # inline with the two unchanged fields short-circuiting first
+        if name == "state":
+            if (
+                inst.outcome is InstanceOutcome.SUCCESS
+                and inst.validate_state is ValidateState.INIT
+            ):
+                was = old is InstanceState.OVER
+                now_fresh = new is InstanceState.OVER
+                if was != now_fresh:
+                    self._fresh_delta(inst.job_id, 1 if now_fresh else -1)
+        elif name == "outcome":
+            if (
+                inst.state is InstanceState.OVER
+                and inst.validate_state is ValidateState.INIT
+            ):
+                was = old is InstanceOutcome.SUCCESS
+                now_fresh = new is InstanceOutcome.SUCCESS
+                if was != now_fresh:
+                    self._fresh_delta(inst.job_id, 1 if now_fresh else -1)
+            return
+        elif name == "validate_state":
+            if (
+                inst.state is InstanceState.OVER
+                and inst.outcome is InstanceOutcome.SUCCESS
+            ):
+                was = old is ValidateState.INIT
+                now_fresh = new is ValidateState.INIT
+                if was != now_fresh:
+                    self._fresh_delta(inst.job_id, 1 if now_fresh else -1)
+            return
         if name == "state":
             self._insts_by_state[old].discard(inst.id)
             self._insts_by_state[new].add(inst.id)
@@ -492,6 +563,79 @@ class JobStore:
             if host is not None:
                 inst.volunteer_id = host.volunteer_id
                 self._job_vols.setdefault(inst.job_id, set()).add(host.volunteer_id)
+
+    def clear_transition_flags(self, jobs: List[Job]) -> None:
+        """Bulk flag clear for one tick's pending list (batch validation
+        engine): same end state as per-job ``transition_flag = False``, with
+        one set-difference instead of per-write observer dispatch."""
+        for job in jobs:
+            object.__setattr__(job, "transition_flag", False)
+        self.transition_pending.difference_update([j.id for j in jobs])
+
+    def finish_jobs(self, entries: List[Tuple[Job, int]]) -> None:
+        """Bulk ACTIVE→SUCCESS completion for one tick's decided jobs
+        (batch validation engine): ``(job, canonical_instance_id)`` pairs.
+
+        Replicates exactly what per-field assignment would do — state-set
+        moves, transition/assimilate pending membership, batch open-count
+        bookkeeping — as fused set operations. The jobs are ACTIVE (so not
+        yet assimilated; the delete/purge indexes cannot change) and end
+        with ``transition_flag=True`` exactly like the scalar
+        ``_validate`` epilogue. ``check_invariants`` cross-checks this
+        against the scan semantics.
+        """
+        ids = []
+        for job, canonical_id in entries:
+            job.canonical_instance_id = canonical_id
+            object.__setattr__(job, "state", JobState.SUCCESS)
+            object.__setattr__(job, "transition_flag", True)
+            ids.append(job.id)
+            if job.batch_id:
+                left = self._batch_open.get(job.batch_id, 0) - 1
+                self._batch_open[job.batch_id] = left
+                if left <= 0:
+                    b = self.batches.get(job.batch_id)
+                    if b is not None and b.job_ids and b.completed_time is None:
+                        self.batch_done_pending.add(job.batch_id)
+        self._jobs_by_state[JobState.ACTIVE].difference_update(ids)
+        self._jobs_by_state[JobState.SUCCESS].update(ids)
+        # flag is set but the job is no longer ACTIVE: not transition-pending
+        self.transition_pending.difference_update(ids)
+        self.assimilate_pending.update(ids)
+
+    def set_validate_states(self, insts: List[JobInstance], vstate: ValidateState) -> None:
+        """Bulk validate_state assignment (batch validation engine): same
+        index maintenance as per-field assignment, minus the per-write
+        observer dispatch; freshness deltas are aggregated per job before
+        touching the validation-pending index."""
+        deltas: Dict[int, int] = {}
+        to_init = vstate is ValidateState.INIT
+        init = ValidateState.INIT
+        over = InstanceState.OVER
+        success = InstanceOutcome.SUCCESS
+        for inst in insts:
+            d = inst.__dict__
+            old = d.get("validate_state")
+            if old is vstate:
+                continue
+            d["validate_state"] = vstate
+            if d.get("_store") is None:
+                continue
+            if d["state"] is over and d["outcome"] is success:
+                if (old is init) != to_init:
+                    jid = inst.job_id
+                    deltas[jid] = deltas.get(jid, 0) + (1 if to_init else -1)
+        for jid, delta in deltas.items():
+            self._fresh_delta(jid, delta)
+
+    def _fresh_delta(self, job_id: int, delta: int) -> None:
+        c = self._fresh_success.get(job_id, 0) + delta
+        if c <= 0:
+            self._fresh_success.pop(job_id, None)
+            self.validation_pending.discard(job_id)
+        else:
+            self._fresh_success[job_id] = c
+            self.validation_pending.add(job_id)
 
     # ------------------------------------------------------------------
     # invariant checker: index ↔ scan agreement
@@ -582,6 +726,20 @@ class JobStore:
                 problems.append(f"UNSENT instance {iid} not in any dispatch queue")
                 break
 
+        expect_fresh: Dict[int, int] = {}
+        for i in self.instances.values():
+            if _is_fresh_success(i):
+                expect_fresh[i.job_id] = expect_fresh.get(i.job_id, 0) + 1
+        if self._fresh_success != expect_fresh:
+            diff = set(self._fresh_success.items()) ^ set(expect_fresh.items())
+            problems.append(f"fresh-success counts diverged: {sorted(diff)[:5]}")
+        if self.validation_pending != set(expect_fresh):
+            problems.append(
+                "validation_pending diverged: "
+                f"extra={sorted(self.validation_pending - set(expect_fresh))[:5]} "
+                f"missing={sorted(set(expect_fresh) - self.validation_pending)[:5]}"
+            )
+
         expect_hosts: Dict[int, Set[int]] = {}
         expect_vols: Dict[int, Set[int]] = {}
         for inst in self.instances.values():
@@ -607,3 +765,17 @@ def _set_membership(s: Set[int], item: int, member: bool) -> None:
         s.add(item)
     else:
         s.discard(item)
+
+
+def _is_fresh_success(inst: JobInstance, **override) -> bool:
+    """The validation-pending predicate (§4): a completed success whose
+    validate_state is still INIT. ``override`` substitutes one field's prior
+    value so observers can evaluate the predicate before a mutation."""
+    state = override.get("state", inst.state)
+    outcome = override.get("outcome", inst.outcome)
+    vstate = override.get("validate_state", inst.validate_state)
+    return (
+        state == InstanceState.OVER
+        and outcome == InstanceOutcome.SUCCESS
+        and vstate == ValidateState.INIT
+    )

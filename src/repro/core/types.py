@@ -350,7 +350,7 @@ class Job(IndexObserved):
 class JobInstance(IndexObserved):
     """A job instance / result (§3.3, §4)."""
 
-    _TRACKED = frozenset({"state", "deadline", "host_id"})
+    _TRACKED = frozenset({"state", "deadline", "host_id", "outcome", "validate_state"})
 
     id: int
     job_id: int

@@ -218,6 +218,21 @@ def test_credit_grant_drops_outliers():
     assert CreditSystem.grant_amount([2.0]) == pytest.approx(2.0)
 
 
+def test_credit_grant_keeps_zero_claims():
+    """Regression: a legitimately-zero claimed credit is part of the trim
+    set — the old ``c > 0`` filter silently dropped it, skewing the
+    trimmed average upward (and an all-zero claim set fell through to the
+    empty-claims fallback instead of being averaged)."""
+    # zero participates in trimming: extremes 0.0 and 6.0 drop, leaving 5.0
+    assert CreditSystem.grant_amount([0.0, 5.0, 6.0]) == pytest.approx(5.0)
+    # all-zero but valid: average of the zeros, not the empty fallback
+    assert CreditSystem.grant_amount([0.0, 0.0]) == 0.0
+    assert CreditSystem.grant_amount([0.0]) == 0.0
+    # negative values are unset/error sentinels and stay excluded
+    assert CreditSystem.grant_amount([-1.0, 2.0]) == pytest.approx(2.0)
+    assert CreditSystem.grant_amount([-1.0]) == 0.0
+
+
 def test_cross_project_credit():
     cpid = volunteer_cpid("Alice@example.com ")
     assert cpid == volunteer_cpid("alice@example.com")

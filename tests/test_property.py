@@ -112,6 +112,84 @@ def test_replication_probability_monotone_decreasing(n_valid):
 
 
 # ---------------------------------------------------------------------------
+# check_set partition invariant (§3.4/§4)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=80, deadline=None)
+@given(
+    outputs=st.lists(
+        st.one_of(
+            st.integers(min_value=0, max_value=4).map(float),
+            st.floats(min_value=-10, max_value=10, allow_nan=False),
+        ),
+        min_size=0,
+        max_size=10,
+    ),
+    quorum=st.integers(min_value=1, max_value=5),
+    fuzzy=st.booleans(),
+)
+def test_check_set_partitions_successes(outputs, quorum, fuzzy):
+    """check_set always splits the successes into valid ∪ invalid ∪
+    inconclusive (disjoint, exhaustive), with canonical ∈ valid whenever a
+    canonical exists — and never anything in both valid and invalid."""
+    reset_ids()
+    insts = [_inst(o) for o in outputs]
+    cmp = fuzzy_comparator(rtol=1e-9, atol=1e-9) if fuzzy else None
+    r = check_set(insts, cmp, quorum)
+    valid_ids = {i.id for i in r.valid}
+    invalid_ids = {i.id for i in r.invalid}
+    inconclusive_ids = {i.id for i in r.inconclusive}
+    assert not valid_ids & invalid_ids
+    assert not valid_ids & inconclusive_ids
+    assert not invalid_ids & inconclusive_ids
+    assert valid_ids | invalid_ids | inconclusive_ids == {i.id for i in insts}
+    if r.canonical is not None:
+        assert r.canonical.id in valid_ids
+        assert len(r.valid) >= quorum
+    else:
+        assert not valid_ids and not invalid_ids
+
+
+# ---------------------------------------------------------------------------
+# grant_amount invariants (§7)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=80, deadline=None)
+@given(
+    claims=st.lists(
+        st.floats(min_value=0.0, max_value=1e6), min_size=1, max_size=8
+    ),
+    seed=st.integers(min_value=0, max_value=999),
+)
+def test_grant_amount_permutation_invariant_and_bounded(claims, seed):
+    """grant_amount is permutation-invariant and bounded by the [min, max]
+    of the surviving (non-negative) claims — zero claims included."""
+    import random as _random
+
+    granted = CreditSystem.grant_amount(claims)
+    shuffled = list(claims)
+    _random.Random(seed).shuffle(shuffled)
+    assert CreditSystem.grant_amount(shuffled) == granted
+    assert min(claims) <= granted <= max(claims)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    claims=st.lists(
+        st.floats(min_value=0.0, max_value=1e6), min_size=1, max_size=8
+    ),
+    sentinels=st.lists(
+        st.floats(min_value=-1e6, max_value=-1e-9), min_size=0, max_size=4
+    ),
+)
+def test_grant_amount_ignores_negative_sentinels(claims, sentinels):
+    assert CreditSystem.grant_amount(claims + sentinels) == \
+        CreditSystem.grant_amount(claims)
+
+
+# ---------------------------------------------------------------------------
 # linear-bounded allocation (§3.9)
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,231 @@
+"""End-to-end scenario matrix (§9): deterministic-seed EmBOINC-style runs
+across the deployment regimes the paper's reliability story targets — churn,
+malicious hosts, heterogeneous fleets, adaptive replication, intermittent
+availability, long-horizon quiescence — asserting golden bounds on
+SimMetrics (error_rate, replication_overhead, idle_fraction) and that the
+batch validation engine reproduces the scalar oracle's metrics exactly in
+every scenario.
+
+EmBOINC-style simulation studies (cf. Anderson & Fedak, "The Computational
+and Storage Potential of Volunteer Computing") hinge on exactly these
+replication-overhead and accepted-error metrics; this suite pins them.
+"""
+import pytest
+
+from repro.core import (
+    App,
+    AppVersion,
+    GridSimulation,
+    Job,
+    JobState,
+    Platform,
+    ProjectServer,
+    default_cpu_plan_class,
+    fuzzy_comparator,
+    gpu_plan_class,
+    make_population,
+    next_id,
+    reset_ids,
+)
+
+DAY = 86400.0
+
+
+def build_server(batch_validate, adaptive=False, gpu=False, delay_bound=4 * 3600.0):
+    server = ProjectServer(name="p", purge_delay=1e18, batch_validate=batch_validate)
+    app = App(
+        name="w",
+        min_quorum=2,
+        init_ninstances=2,
+        delay_bound=delay_bound,
+        adaptive_replication=adaptive,
+        comparator=fuzzy_comparator(rtol=1e-6, atol=1e-9),
+    )
+    for osn in ("windows", "mac", "linux"):
+        app.add_version(
+            AppVersion(
+                id=next_id("appver"),
+                app_name="w",
+                platform=Platform(osn, "x86_64"),
+                version_num=1,
+                plan_class=default_cpu_plan_class(),
+            )
+        )
+        if gpu:
+            app.add_version(
+                AppVersion(
+                    id=next_id("appver"),
+                    app_name="w",
+                    platform=Platform(osn, "x86_64"),
+                    version_num=1,
+                    plan_class=gpu_plan_class(),
+                )
+            )
+    server.add_app(app)
+    return server
+
+
+def run_scenario(batch_validate, n_jobs=60, n_hosts=12, horizon=2 * DAY,
+                 sim_seed=3, pop_seed=1, adaptive=False, gpu=False,
+                 delay_bound=4 * 3600.0, est_hours=0.2, waves=1,
+                 wave_period=6 * 3600.0, **pop_kw):
+    reset_ids()
+    server = build_server(batch_validate, adaptive=adaptive, gpu=gpu,
+                          delay_bound=delay_bound)
+    pop = make_population(n_hosts, seed=pop_seed, horizon=horizon, **pop_kw)
+    sim = GridSimulation(server, pop, seed=sim_seed)
+    per_wave = n_jobs // waves
+
+    def submit(now):
+        for _ in range(per_wave):
+            server.submit_job(
+                Job(id=next_id("job"), app_name="w",
+                    est_flop_count=est_hours * 3600 * 16.5e9),
+                now,
+            )
+
+    if waves == 1:
+        submit(0.0)
+    else:
+        for w in range(waves):
+            sim.schedule_callback(w * wave_period, submit)
+    m = sim.run(horizon)
+    sim.audit_validation()
+    return server, sim, m
+
+
+def assert_engine_oracle_identical(kw):
+    """Every scenario's metrics must be identical with batch_validate
+    on/off; returns the (batch-engine) run for golden-bound assertions."""
+    srv_b, sim_b, m_b = run_scenario(True, **dict(kw))
+    srv_s, sim_s, m_s = run_scenario(False, **dict(kw))
+    assert vars(m_b) == vars(m_s), "engine diverged from scalar oracle"
+    assert srv_b.counts() == srv_s.counts()
+    assert srv_b.credit.total == srv_s.credit.total
+    assert {
+        i: (x.validate_state, x.granted_credit)
+        for i, x in srv_b.store.instances.items()
+    } == {
+        i: (x.validate_state, x.granted_credit)
+        for i, x in srv_s.store.instances.items()
+    }
+    return srv_b, sim_b, m_b
+
+
+class TestScenarioMatrix:
+    def test_long_horizon_quiescence(self):
+        """Clean dedicated grid, generous horizon: everything validates,
+        nothing is wrongly accepted, and the plant goes quiescent —
+        overhead settles at the quorum-2 floor and the tail of the horizon
+        is idle."""
+        server, sim, m = assert_engine_oracle_identical(
+            dict(horizon=3 * DAY)
+        )
+        counts = server.counts()
+        assert counts["jobs_success"] == 60
+        assert counts["jobs_failure"] == 0
+        assert m.error_rate == 0.0
+        assert 2.0 <= m.replication_overhead <= 2.3
+        # quiescent tail: instances all resolved, most capacity unused
+        assert counts["instances_in_progress"] == 0
+        assert counts["instances_unsent"] == 0
+        assert m.idle_fraction > 0.5
+
+    def test_high_churn(self):
+        """Hosts permanently depart mid-run (§4): deadlines fire, retries
+        land on surviving hosts, and the work still completes — at a
+        visible replication-overhead premium."""
+        server, sim, m = assert_engine_oracle_identical(
+            dict(
+                n_hosts=16,
+                churn_rate=1.0 / (1.5 * DAY),
+                horizon=5 * DAY,
+                delay_bound=8 * 3600.0,
+                est_hours=1.5,
+            )
+        )
+        counts = server.counts()
+        assert counts["jobs_success"] >= 56  # work survives departures
+        assert m.error_rate == 0.0
+        assert 2.0 <= m.replication_overhead <= 2.5
+        # churn actually happened and cost something: most hosts gone,
+        # deadline misses retried elsewhere
+        assert len(sim.specs) < 8
+        assert sum(t.metrics.timeouts for t in server.transitioners) > 0
+
+    def test_malicious_hosts(self):
+        """5% malicious volunteers (§3.4): quorum-2 replication rejects
+        every fabricated result."""
+        server, sim, m = assert_engine_oracle_identical(
+            dict(malicious_fraction=0.05, error_prob=0.01, horizon=3 * DAY)
+        )
+        counts = server.counts()
+        assert m.wrong_accepted == 0
+        assert m.error_rate == 0.0
+        assert counts["jobs_success"] >= 55
+        # corruption forced extra (tie-breaker) instances beyond the quorum
+        assert m.replication_overhead > 2.0
+
+    def test_heterogeneous_cpu_gpu_mix(self):
+        """Half the fleet carries a GPU ~60x the CPU speed (§3.1 plan
+        classes): the mixed fleet validates cross-device via the fuzzy
+        comparator and finishes much faster than CPU-only."""
+        server, sim, m = assert_engine_oracle_identical(
+            dict(gpu=True, gpu_fraction=0.5, horizon=2 * DAY, n_jobs=80,
+                 est_hours=0.4)
+        )
+        counts = server.counts()
+        assert counts["jobs_success"] == 80
+        assert m.error_rate == 0.0
+        # GPU instances actually dispatched: some PFC came from GPU hosts
+        gpu_versions = {
+            v.id
+            for v in server.store.apps["w"].versions
+            if v.plan_class.name.startswith("gpu")
+        }
+        assert any(
+            i.app_version_id in gpu_versions
+            for i in server.store.instances.values()
+        )
+
+    def test_adaptive_vs_plain_replication(self):
+        """§3.4's core claim, end to end: adaptive replication cuts the
+        overhead toward 1 while the accepted-error rate stays bounded."""
+        kw = dict(n_jobs=360, n_hosts=20, horizon=6 * DAY, error_prob=0.005,
+                  waves=12)
+        _, _, plain = assert_engine_oracle_identical(dict(kw))
+        _, _, adaptive = assert_engine_oracle_identical(dict(kw, adaptive=True))
+        assert plain.replication_overhead >= 2.0
+        assert adaptive.replication_overhead < plain.replication_overhead
+        assert adaptive.replication_overhead < 1.9
+        assert adaptive.error_rate <= 0.02
+        assert adaptive.correct_accepted >= 330
+
+    def test_low_availability(self):
+        """Hosts compute only ~60% of the time (§1.1): throughput drops
+        but correctness and eventual completion hold, and the measured
+        idle fraction reflects the unavailability."""
+        server, sim, m = assert_engine_oracle_identical(
+            dict(availability=0.6, horizon=4 * DAY)
+        )
+        counts = server.counts()
+        assert counts["jobs_success"] >= 55
+        assert m.error_rate == 0.0
+        assert m.idle_fraction >= 0.35
+
+    def test_error_prone_fleet(self):
+        """Flaky hardware corrupting 5% of results: replication filters
+        every corruption; the overhead premium pays for it."""
+        server, sim, m = assert_engine_oracle_identical(
+            dict(error_prob=0.05, horizon=3 * DAY)
+        )
+        assert m.wrong_accepted == 0
+        assert server.counts()["jobs_success"] >= 55
+        assert m.replication_overhead > 2.0
+        # invalid results actually flowed through the validator
+        from repro.core import ValidateState
+
+        assert any(
+            i.validate_state == ValidateState.INVALID
+            for i in server.store.instances.values()
+        )

@@ -93,6 +93,50 @@ class TestCheckSet:
         r = check_set([_inst(3.0)], None, min_quorum=1)
         assert r.canonical is not None
 
+    def test_nontransitive_fuzzy_grouping_order_pinned(self):
+        """The check_set grouping-order contract (pinned; the batch engine
+        mirrors it): instances are visited in the given order, each joins
+        the first group whose *representative* (first member) it matches,
+        and ties between equal-size groups go to the earlier group.
+
+        With a tolerance relation a~b, b~c, a!~c the outcome is therefore
+        order-dependent — this test pins it so the contract can't drift.
+        """
+        cmp = fuzzy_comparator(rtol=0.0, atol=1.0)
+        a, b, c = _inst(0.0), _inst(0.9), _inst(1.8)
+        assert cmp(a.output, b.output) and cmp(b.output, c.output)
+        assert not cmp(a.output, c.output)
+
+        # order [a, b, c]: b joins a's group; c is compared against the
+        # *representative* a (never b), fails, and opens its own group
+        r = check_set([a, b, c], cmp, min_quorum=2)
+        assert r.canonical is a
+        assert r.valid == [a, b] and r.invalid == [c]
+
+        # order [c, b, a]: the mirror outcome — same sizes, different split
+        for i in (a, b, c):
+            i.validate_state = ValidateState.INIT
+        r = check_set([c, b, a], cmp, min_quorum=2)
+        assert r.canonical is c
+        assert r.valid == [c, b] and r.invalid == [a]
+
+        # order [b, a, c]: everyone matches representative b — one group,
+        # even though a and c disagree with each other
+        for i in (a, b, c):
+            i.validate_state = ValidateState.INIT
+        r = check_set([b, a, c], cmp, min_quorum=2)
+        assert r.canonical is b
+        assert r.valid == [b, a, c] and r.invalid == []
+
+        # equal-size tie: the earlier-created group wins
+        for i in (a, c):
+            i.validate_state = ValidateState.INIT
+        d = _inst(0.1)
+        e = _inst(1.9)
+        r = check_set([a, c, d, e], cmp, min_quorum=2)
+        assert r.canonical is a
+        assert r.valid == [a, d] and r.invalid == [c, e]
+
     def test_late_validate_against_canonical(self):
         canonical = _inst(1.0)
         late_ok = _inst(1.0)
