@@ -12,13 +12,17 @@ throughput for the batch path at the 10k-host population.
 
 Smoke mode (CI): ``python -m benchmarks.bench_dispatch --smoke`` or
 ``BENCH_DISPATCH_SMOKE=1`` trims the populations to 256 hosts.
+
+Results are written to ``benchmarks/BENCH_dispatch.json`` (machine-readable;
+schema {schema, rows, acceptance}) like the other engine benchmarks.
 """
 from __future__ import annotations
 
 import os
 import sys
+from typing import Optional
 
-from .common import emit, make_project, submit_jobs, timer
+from .common import RESULTS, emit, make_project, submit_jobs, timer, write_bench_json
 
 from repro.core import (
     Host,
@@ -98,7 +102,7 @@ def _measure_batch(n_hosts: int, n_requests: int, chunk_size: int) -> float:
     return dispatched / wall if wall > 0 else 0.0
 
 
-def _compare_populations(smoke: bool) -> None:
+def _compare_populations(smoke: bool) -> dict:
     """§5.1 at scale: scalar vs vectorized engines over growing host fleets.
 
     The scalar reference path costs O(cache²) Python per request (the
@@ -114,6 +118,9 @@ def _compare_populations(smoke: bool) -> None:
     n_batch = 256 if smoke else 2048
     scalar_refill = 8 if smoke else 32
     chunk = 64 if smoke else 256
+    floor_pop = populations[-1] if smoke else 10_000
+    floor = 2.0 if smoke else 5.0
+    speedup_at_floor: Optional[float] = None
     for pop in populations:
         scalar_rate = _measure_scalar(pop, n_scalar, scalar_refill)
         batch_rate = _measure_batch(pop, n_batch, chunk)
@@ -128,15 +135,26 @@ def _compare_populations(smoke: bool) -> None:
             1e6 / max(batch_rate, 1e-9),
             f"jobs_per_s={batch_rate:.0f}",
         )
-        floor = pop == 10_000  # acceptance floor applies at the 10k population
+        is_floor = pop == floor_pop
         emit(
             f"dispatch_speedup_{pop}hosts",
             0.0,
-            f"speedup={speedup:.1f}x" + (f";pass={speedup >= 5.0}" if floor else ""),
+            f"speedup={speedup:.1f}x"
+            + (f";floor={floor:.0f}x;pass={speedup >= floor}" if is_floor else ""),
         )
+        if is_floor:
+            speedup_at_floor = speedup
+    return {
+        "metric": f"dispatch throughput speedup at {floor_pop} hosts",
+        "floor": floor,
+        "measured": speedup_at_floor,
+        "pass": (speedup_at_floor or 0.0) >= floor,
+        "smoke": smoke,
+    }
 
 
 def run() -> None:
+    start_row = len(RESULTS)
     reset_ids()
     server = make_project(min_quorum=1)
     hosts = _make_hosts(server, 64)
@@ -176,7 +194,21 @@ def run() -> None:
     )
 
     smoke = "--smoke" in sys.argv or bool(os.environ.get("BENCH_DISPATCH_SMOKE"))
-    _compare_populations(smoke)
+    acceptance = _compare_populations(smoke)
+    run.acceptance = acceptance  # picked up by benchmarks.run and CI
+    write_bench_json(
+        path=os.environ.get(
+            "BENCH_DISPATCH_JSON_PATH",
+            os.path.join(os.path.dirname(__file__), "BENCH_dispatch.json"),
+        ),
+        rows=RESULTS[start_row:],
+        extra={"acceptance": acceptance},
+    )
+    if smoke and not acceptance["pass"]:
+        raise SystemExit(
+            f"bench_dispatch smoke floor failed: {acceptance['measured']:.1f}x"
+            f" < {acceptance['floor']:.0f}x"
+        )
 
 
 if __name__ == "__main__":

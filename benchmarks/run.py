@@ -5,6 +5,8 @@ and their paper sections:
 
   bench_dispatch    S5.1/[17]  hundreds of dispatches per second; fast batch submit
   bench_daemons     S5.1       indexed store: O(dirty) daemon passes at 1M-job backlogs
+  bench_world       S9         columnar world + vectorized event loop vs the
+                               per-event scalar simulator at 1k-100k hosts
   bench_clients     S6.1-6.2   vectorized host-population client engine vs scalar ticks
   bench_validation  S3.4/S7    vectorized validation engine vs scalar check_set
                                passes; adaptive replication: overhead -> ~1
@@ -40,6 +42,7 @@ def main() -> None:
         bench_scheduling,
         bench_validation,
         bench_workfetch,
+        bench_world,
     )
     from .common import write_bench_json
 
@@ -48,6 +51,7 @@ def main() -> None:
     for mod in (
         bench_dispatch,
         bench_daemons,
+        bench_world,
         bench_clients,
         bench_validation,
         bench_allocation,

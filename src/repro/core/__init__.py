@@ -42,6 +42,7 @@ from .scheduler import (
 )
 from .server import ProjectServer
 from .simulator import GridSimulation, HostSpec, make_population
+from .world import ExpDrawCache, HostArrays
 from .store import JobStore
 from .types import (
     App,
@@ -92,6 +93,8 @@ __all__ = [
     "ExponentialBackoff",
     "Feeder",
     "GridSimulation",
+    "HostArrays",
+    "ExpDrawCache",
     "HRLevel",
     "Host",
     "HostSpec",

@@ -115,6 +115,15 @@ class AdaptiveReplication:
         hi, vi = self._index(host_id, app_version_id)
         self._table[hi, vi] = 0
 
+    def forget_host(self, host_id: int) -> None:
+        """Churn cleanup (§4): zero a departed host's reputation row. The
+        dense row index stays interned (late-arriving results may still
+        re-earn entries harmlessly), but the accumulated counts are
+        cleared — a returning host id starts from zero reputation."""
+        hi = self._host_idx.get(host_id)
+        if hi is not None and hi < self._table.shape[0]:
+            self._table[hi, :] = 0
+
     def expected_overhead(self, host_id: int, app_version_id: int) -> float:
         """Expected replication factor for this pair: 1 + p (one extra
         instance with probability p). The paper's claim is this -> ~1."""

@@ -49,13 +49,16 @@ server-dispatched work).
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, TYPE_CHECKING
 
 import numpy as np
 
 from .client import Client, ClientJob, RunState, WorkRequest, WRRResult
 from .scheduler import ResourceRequest
 from .types import ResourceType
+
+if TYPE_CHECKING:  # pragma: no cover
+    from .world import HostArrays
 
 _MAX_EVENTS = 10_000  # mirrors wrr_simulate's event cap
 
@@ -333,14 +336,133 @@ class BatchClientEngine:
         return s
 
     # ------------------------------------------------------------------
+    # world-backed snapshot: persistent columns, no per-job rebuild
+    # ------------------------------------------------------------------
+
+    def _snapshot_world(
+        self,
+        world: "HostArrays",
+        host_ids: Sequence[int],
+        now: float,
+        accrue_empty: bool = True,
+    ) -> _Snapshot:
+        """Build a :class:`_Snapshot` from the simulator's persistent world
+        columns (``core/world.py``) instead of re-materializing every
+        ``ClientJob`` object: the per-job fields were mirrored into the
+        slot-major ``[max_jobs, n_hosts]`` matrix at mutation time, so the
+        snapshot is a set of column gathers plus the shared
+        remaining-estimate formula — bit-identical to :meth:`_snapshot`
+        over the same queues.
+
+        Dirty-host refresh contract: hosts whose ``ClientJob`` objects were
+        mutated outside the simulator/engine hooks (``world.mark_dirty``)
+        get their columns rebuilt from the objects first. Multi-project
+        hosts (whose WRR priority ordering needs the per-job project map)
+        fall back to the object snapshot after a column->object sync.
+        """
+        if world.dirty:
+            for h in host_ids:
+                if h in world.dirty:
+                    world.resync_host(h)
+        idx_l = [world.index[h] for h in host_ids]
+        clients = [world.clients[i] for i in idx_l]
+        if any(
+            world.multi[i] or world.clients[i] is None
+            or len(world.clients[i].projects) > 1
+            for i in idx_l
+        ):
+            world.sync_objects(host_ids)
+            return self._snapshot(clients, now, accrue_empty)
+
+        s = _Snapshot()
+        s.clients = clients
+        H = len(clients)
+        s.H = H
+        idx = np.fromiter(idx_l, np.int64, H) if H else np.zeros(0, np.int64)
+        counts = world.q_count[idx]
+        # priority accrual side effects mirror the object path: needs_work
+        # accrues unconditionally, schedule skips empty queues
+        s.prios = [
+            c.project_priorities(now)
+            if (accrue_empty or counts[k] > 0)
+            else {}
+            for k, c in enumerate(clients)
+        ]
+        rtypes = list(world.rtypes)
+        s.rtypes = rtypes
+        J = int(counts.max()) if H else 0
+        s.J = J
+        s.live = (
+            np.arange(J)[:, None] < counts[None, :]
+            if J
+            else np.zeros((0, H), dtype=bool)
+        )
+        s.perm = (
+            np.tile(np.arange(J, dtype=np.int64)[:, None], (1, H))
+            if J
+            else np.zeros((0, H), np.int64)
+        )
+        s.identity_perm = True  # single project per host: WRR order is FIFO
+
+        ef = world.q_estf[:J, idx]
+        efc = world.q_efc[:J, idx]
+        fd = world.q_frac[:J, idx]
+        runtime = world.q_runtime[:J, idx]
+        exact = world.q_exact[:J, idx]
+        s.dl = world.q_dl[:J, idx]
+        s.wss = world.q_wss[:J, idx]
+        s.nci = world.q_nci[:J, idx]
+        s.run_state = world.q_running[:J, idx]
+        s.slice_start = world.q_slice[:J, idx]
+        s.chk_time = world.q_chk[:J, idx]
+        pv = np.fromiter(
+            (next(iter(p.values()), 0.0) for p in s.prios), np.float64, H
+        )
+        s.prio_j = np.where(s.live, pv[None, :], 0.0)
+        s.usage = {rt: world.q_usage[rt][:J, idx] for rt in rtypes}
+        # remaining_estimate — the same fused formula (and the same IEEE op
+        # order) as the object snapshot; padding cells are exact zeros by
+        # the world's compaction contract, so they evaluate to inf just as
+        # the object path's zero-padded rows do
+        with np.errstate(divide="ignore", invalid="ignore"):
+            static = np.where(ef > 0.0, efc / ef, np.inf)
+            dynamic = np.where(fd > 0.0, runtime / fd, 0.0)
+            total = np.where(exact, dynamic, fd * dynamic + (1.0 - fd) * static)
+            d = total - runtime
+            rem = np.where(fd > 0.0, np.where(d > 0.0, d, 0.0), static)
+        s.rem = np.maximum(rem, 1e-9)
+        s.has_inf = bool(np.isinf(s.rem[s.live]).any()) if J else False
+
+        s.queued = [world.queue_jobs[i] for i in idx_l]
+        s.client_rtypes = [list(c.resources) for c in clients]
+        s.nins = {rt: world.nins[rt][idx] for rt in rtypes}
+        s.has = {rt: world.has[rt][idx] for rt in rtypes}
+        s.all_has = {rt: bool(s.has[rt].all()) for rt in rtypes}
+        s.ram = world.ram[idx]
+        s.ram_frac = world.ram_frac[idx]
+        s.horizon = world.b_hi[idx]
+        s.ts = world.time_slice[idx]
+        s.ncpu = world.sched_ncpu[idx]
+        s.cu = s.usage.get(ResourceType.CPU, np.zeros((J, H)))
+        gpu = np.zeros((J, H), dtype=bool)
+        for rt in _GPU_LIKE:
+            if rt in s.usage:
+                gpu |= s.usage[rt] > 0.0
+        s.gpu = gpu
+        return s
+
+    # ------------------------------------------------------------------
     # fused WRR simulation (§6.1, Fig. 5)
     # ------------------------------------------------------------------
 
-    def _greedy(self, s, order_live, active, u_w, u_eps, u_zero, wss_w):
+    def _greedy(self, s, order_live, active, u_w, u_eps, u_zero, wss_w,
+                row_counts=None):
         """One greedy maximal-set pass in WRR order: per-slot feasibility
         under per-resource caps + RAM (columns masked by ``active`` if
         given). Returns the chosen [J, H] mask and the leftover caps (for
-        the idle computation)."""
+        the idle computation). ``row_counts`` (live candidates per WRR
+        rank, maintained by the event loop) short-circuits exhausted rows
+        without touching the arrays."""
         J = s.J
         rtypes = s.rtypes
         cap = {rt: s.nins[rt].copy() for rt in rtypes}
@@ -349,6 +471,8 @@ class BatchClientEngine:
         buf = np.empty(s.H, dtype=bool)
         feas = np.empty(s.H, dtype=bool)
         for k in range(J):
+            if row_counts is not None and not row_counts[k]:
+                continue
             if active is None:
                 np.copyto(feas, order_live[k])
             else:
@@ -405,6 +529,9 @@ class BatchClientEngine:
         t = np.zeros(H)
         not_done = live_w.copy()
         active = live_w.any(axis=0) if J else np.zeros(H, dtype=bool)
+        # live candidates per WRR rank, decremented as jobs finish: lets the
+        # greedy skip exhausted rows (most of a ragged batch's padding)
+        row_counts = not_done.sum(axis=1)
         miss_events: List[Tuple[np.ndarray, np.ndarray]] = []
 
         cap0 = None  # leftover caps of the *first* greedy (the idle set)
@@ -419,7 +546,8 @@ class BatchClientEngine:
             ev += 1
             # greedy maximal set in WRR order under resource + RAM caps
             running, cap = self._greedy(
-                s, not_done, active, u_w, u_eps, u_zero, wss_w
+                s, not_done, active, u_w, u_eps, u_zero, wss_w,
+                row_counts=row_counts,
             )
             if ev == 1:
                 # the scalar idle computation re-runs the greedy over the
@@ -479,6 +607,7 @@ class BatchClientEngine:
             if dsel.any():
                 dk, dh = rk[dsel], rh[dsel]
                 not_done[dk, dh] = False
+                np.subtract.at(row_counts, dk, 1)
                 msel = (now + t[dh]) > dl_w[dk, dh]
                 if msel.any():
                     miss_events.append((dk[msel], dh[msel]))
@@ -704,3 +833,27 @@ class BatchClientEngine:
         raw = self._wrr_raw(s, now)
         run_sets = self._apply_run_sets(s, raw.misses, now)
         return run_sets, self._needs_from_raw(s, raw)
+
+    # ------------------------------------------------------------------
+    # world-backed entry points (persistent columns; see _snapshot_world)
+    # ------------------------------------------------------------------
+
+    def needs_work_world(
+        self, world: "HostArrays", host_ids: Sequence[int], now: float
+    ) -> List[Dict[ResourceType, ResourceRequest]]:
+        """Batched ``Client.needs_work`` straight off the world columns."""
+        s = self._snapshot_world(world, host_ids, now)
+        return self._needs_from_raw(s, self._wrr_raw(s, now))
+
+    def schedule_world(
+        self, world: "HostArrays", host_ids: Sequence[int], now: float
+    ) -> List[List[ClientJob]]:
+        """Batched ``Client.schedule`` off the world columns; the run-set
+        mutations are applied to the ``ClientJob`` objects and the world's
+        run-state columns are re-synced."""
+        s = self._snapshot_world(world, host_ids, now, accrue_empty=False)
+        raw = self._wrr_raw(s, now)
+        out = self._apply_run_sets(s, raw.misses, now)
+        for h in host_ids:
+            world.sync_run_state(h)
+        return out

@@ -52,7 +52,15 @@ from .scheduler import (
     W_SKIPPED,
 )
 from .store import JobStore
-from .types import AppVersion, HRLevel, Host, Job, ResourceType, hr_class
+from .types import (
+    AppVersion,
+    HRLevel,
+    Host,
+    InstanceState,
+    Job,
+    ResourceType,
+    hr_class,
+)
 
 
 @dataclass
@@ -77,6 +85,11 @@ class BatchDispatchEngine:
     def __init__(self, store: JobStore, feeder: Feeder) -> None:
         self.store = store
         self.feeder = feeder
+        # cache-content generation this snapshot was built at; the
+        # scheduler's persistent-dispatch path rebuilds when it trails
+        # ``feeder.version`` (dispatch-tail mutations arrive as events and
+        # do not bump the generation)
+        self.version = feeder.version
         slots = feeder.slots
         n = len(slots)
         self.n = n
@@ -122,6 +135,14 @@ class BatchDispatchEngine:
             self._job_slots.setdefault(job.id, []).append(i)
             if slot.taken:
                 continue
+            inst = store.instances.get(slot.instance_id)
+            if inst is None or inst.state != InstanceState.UNSENT:
+                # stale slot (instance cancelled/timed out since the feeder
+                # cached it): exclude it so ``valid`` is exact — the bulk
+                # reject classification (cache-miss vs skip-bump) relies on
+                # it. The feeder clears stale slots on every fill, so this
+                # probe only matters for engines built mid-staleness.
+                continue
             app = store.apps[job.app_name]
             self.valid[i] = True
             self.job_id[i] = job.id
@@ -151,11 +172,20 @@ class BatchDispatchEngine:
                 self.loc_mask[i] = True
                 self.input_files[i] = job.input_files
 
+        # skip-bookkeeping arrays for the bulk-reject path: whether a
+        # position is its job's first cached slot, and how many slots the
+        # job holds (single-slot jobs — the common case — take a pure
+        # array-increment fast path in bulk_skip)
+        self.skip_first = np.zeros(n, dtype=bool)
+        self.job_nslots = np.zeros(n, dtype=np.int64)
         for jid, positions in self._job_slots.items():
             first = slots[positions[0]]
             if first is not None:
                 for p in positions:
                     self.skips[p] = first.skipped
+            self.skip_first[positions[0]] = True
+            for p in positions:
+                self.job_nslots[p] = len(positions)
 
     # ------------------------------------------------------------------
 
@@ -183,9 +213,29 @@ class BatchDispatchEngine:
         score order — identical contents and order to the scalar scan
         starting at ``start``, with ``est_rt``/``scaled_rt`` precomputed.
         """
+        rows = self.candidate_rows(sched, host, req, rtype, start, now)
+        if rows is None:
+            return iter(())
+        pos, gidx, scores, est, scaled, choices, _, _ = rows
+        return self._emit(pos, gidx, scores, est, scaled, choices)
+
+    def candidate_rows(
+        self,
+        sched: Scheduler,
+        host: Host,
+        req: ScheduleRequest,
+        rtype: ResourceType,
+        start: int,
+        now: float,
+    ):
+        """The scoring pass behind :meth:`candidates`, returning the ranked
+        candidate *arrays* ``(pos, group, scores, est, scaled, choices)``
+        in descending-score order — the array-driven dispatch tail
+        (``Scheduler._dispatch_resource_vec``) walks these directly instead
+        of materializing a :class:`Candidate` per visited slot."""
         n = self.n
         if n == 0:
-            return iter(())
+            return None
 
         # rotated scan order, then first eligible slot per job (the scalar
         # scan's seen_jobs dedupe keeps the first valid slot it encounters)
@@ -193,20 +243,45 @@ class BatchDispatchEngine:
         elig = self.valid[rot] & ((self.target[rot] < 0) | (self.target[rot] == host.id))
         pos = rot[elig]
         if pos.size == 0:
-            return iter(())
+            return None
         _, first = np.unique(self.job_id[pos], return_index=True)
         reps = pos[np.sort(first)]
 
         # group-level app-version selection: version choice depends only on
         # (app, pinned version, hav lock) for a given host/request/resource
-        trip = np.stack([self.app_idx[reps], self.pin[reps], self.hav[reps]], axis=1)
-        uniq, gfirst, inv = np.unique(trip, axis=0, return_index=True, return_inverse=True)
+        pin_r = self.pin[reps]
+        hav_r = self.hav[reps]
+        if (pin_r == -1).all() and (hav_r == -1).all():
+            # common case (no pinning / hav locks): group key is the app
+            # index alone — a plain 1-D unique, far cheaper than axis=0
+            uniq1, gfirst, inv = np.unique(
+                self.app_idx[reps], return_index=True, return_inverse=True
+            )
+            n_groups = len(uniq1)
+        else:
+            trip = np.stack([self.app_idx[reps], pin_r, hav_r], axis=1)
+            uniq, gfirst, inv = np.unique(
+                trip, axis=0, return_index=True, return_inverse=True
+            )
+            n_groups = uniq.shape[0]
         inv = inv.reshape(-1)
         choices: List[_GroupChoice] = []
-        for g in range(uniq.shape[0]):
+        for g in range(n_groups):
             rep_pos = int(reps[gfirst[g]])
             app = self.apps[int(self.app_idx[rep_pos])]
-            rep_job = self.store.jobs[int(self.job_id[rep_pos])]
+            rep_job = self.store.jobs.get(int(self.job_id[rep_pos]))
+            if rep_job is None:
+                # rep job purged since the (persistent) snapshot was built:
+                # fall back to any live member — the version choice depends
+                # only on the group's shared (pin, hav) fields. _emit drops
+                # the purged slots themselves.
+                for alt in reps[inv == g]:
+                    rep_job = self.store.jobs.get(int(self.job_id[int(alt)]))
+                    if rep_job is not None:
+                        break
+                if rep_job is None:
+                    choices.append(_GroupChoice(None, {}, 0.0, -1))
+                    continue
             version, usage = sched._select_version(app, rep_job, host, req, rtype)
             if version is None:
                 choices.append(_GroupChoice(None, {}, 0.0, -1))
@@ -247,7 +322,7 @@ class BatchDispatchEngine:
 
         mask = g_ok[inv] & hr_ok & kok
         if not mask.any():
-            return iter(())
+            return None
         r = reps[mask]
         g_r = inv[mask]
 
@@ -286,13 +361,16 @@ class BatchDispatchEngine:
             scaled = est / avail
 
         order = np.argsort(-scores, kind="stable")
-        return self._emit(order, r, g_r, scores, est, scaled, choices)
+        pos = r[order]
+        return (
+            pos, g_r[order], scores[order], est[order], scaled[order],
+            choices, self.disk[pos], self.delay[pos],
+        )
 
     def _emit(
         self,
-        order: np.ndarray,
-        r: np.ndarray,
-        g_r: np.ndarray,
+        pos: np.ndarray,
+        gidx: np.ndarray,
         scores: np.ndarray,
         est: np.ndarray,
         scaled: np.ndarray,
@@ -301,13 +379,16 @@ class BatchDispatchEngine:
         """Lazy top-k gather: the dispatch tail stops as soon as the request
         is satisfied, so Candidate objects are only built for visited rows."""
         jobs = self.store.jobs
-        for k in order:
-            p = int(r[k])
-            choice = choices[int(g_r[k])]
+        for k in range(len(pos)):
+            p = int(pos[k])
+            job = jobs.get(int(self.job_id[p]))
+            if job is None:
+                continue  # purged after snapshot build: scalar scan skips it
+            choice = choices[int(gidx[k])]
             yield Candidate(
                 score=float(scores[k]),
                 slot=self.slots[p],
-                job=jobs[int(self.job_id[p])],
+                job=job,
                 version=choice.version,  # type: ignore[arg-type]
                 usage=choice.usage,
                 est_rt=float(est[k]),
@@ -327,33 +408,62 @@ class BatchDispatchEngine:
             p = cand.index
             if p < 0:
                 continue
-            job = cand.job
             if kind == "skip":
-                positions = self._job_slots.get(job.id)
-                if positions and positions[0] == p:
-                    for q in positions:
-                        self.skips[q] = cand.slot.skipped
+                self.apply_skip(p, cand.job, cand.slot)
             elif kind == "dispatch":
-                self.valid[p] = False
-                positions = self._job_slots.get(job.id)
-                if positions is not None:
-                    # the feeder cleared this slot: it no longer counts for
-                    # the first-slot-of-job skip lookup
-                    try:
-                        positions.remove(p)
-                    except ValueError:
-                        pass
-                    if positions:
-                        first = self.slots[positions[0]]
-                        for q in positions:
-                            self.skips[q] = first.skipped if first else 0.0
-                app = self.store.apps[job.app_name]
-                if app.hr_level != HRLevel.NONE and job.hr_class is not None:
-                    hid = self._intern_hr(job.hr_class)
-                    for q in self._job_slots.get(job.id, ()):
-                        self.hr_id[q] = hid
-                if job.hav_version_id is not None:
-                    for q in self._job_slots.get(job.id, ()):
-                        self.hav[q] = job.hav_version_id
+                self.apply_dispatch(p, cand.job)
             elif kind == "taken":
                 self.valid[p] = False
+
+    def apply_skip(self, p: int, job: Job, slot) -> None:
+        positions = self._job_slots.get(job.id)
+        if positions and positions[0] == p:
+            skipped = slot.skipped
+            for q in positions:
+                self.skips[q] = skipped
+
+    def bulk_skip(self, bump: np.ndarray) -> None:
+        """Vectorized skip-bump for a rejected-candidate prefix: increments
+        every slot's counter and folds the score-relevant ``skips`` columns
+        in one array op for single-slot jobs (multi-slot jobs take the
+        sibling-update path). Equivalent to ``apply_skip`` per position."""
+        slots = self.slots
+        for p in bump.tolist():
+            slots[p].skipped += 1
+        first = bump[self.skip_first[bump]]
+        if len(first) == 0:
+            return
+        single = self.job_nslots[first] == 1
+        self.skips[first[single]] += 1.0
+        for p in first[~single].tolist():
+            positions = self._job_slots.get(int(self.job_id[p]))
+            if positions and positions[0] == p:
+                skipped = slots[p].skipped
+                for q in positions:
+                    self.skips[q] = skipped
+
+    def apply_dispatch(self, p: int, job: Job) -> None:
+        self.valid[p] = False
+        positions = self._job_slots.get(job.id)
+        if positions is not None:
+            # the feeder cleared this slot: it no longer counts for
+            # the first-slot-of-job skip lookup
+            try:
+                positions.remove(p)
+            except ValueError:
+                pass
+            self.skip_first[p] = False
+            if positions:
+                first = self.slots[positions[0]]
+                for q in positions:
+                    self.skips[q] = first.skipped if first else 0.0
+                    self.job_nslots[q] = len(positions)
+                self.skip_first[positions[0]] = True
+        app = self.store.apps[job.app_name]
+        if app.hr_level != HRLevel.NONE and job.hr_class is not None:
+            hid = self._intern_hr(job.hr_class)
+            for q in self._job_slots.get(job.id, ()):
+                self.hr_id[q] = hid
+        if job.hav_version_id is not None:
+            for q in self._job_slots.get(job.id, ()):
+                self.hav[q] = job.hav_version_id

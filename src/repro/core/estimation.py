@@ -50,6 +50,9 @@ class RuntimeEstimator:
     min_samples: int = 10  # the paper's threshold ("currently 10")
     host_version: Dict[Tuple[int, int], OnlineStats] = field(default_factory=dict)
     version: Dict[int, OnlineStats] = field(default_factory=dict)
+    # host -> version ids with (host, version) stats, so churn cleanup is
+    # O(host's versions) instead of a full host_version scan
+    _host_versions: Dict[int, set] = field(default_factory=dict)
 
     def record(self, host: Host, version: AppVersion, job: Job, runtime: float) -> None:
         """Record an observed (runtime, est_flop_count) sample."""
@@ -57,7 +60,16 @@ class RuntimeEstimator:
             return
         r = runtime / job.est_flop_count  # seconds per FLOP
         self.host_version.setdefault((host.id, version.id), OnlineStats()).add(r)
+        self._host_versions.setdefault(host.id, set()).add(version.id)
         self.version.setdefault(version.id, OnlineStats()).add(r)
+
+    def forget_host(self, host_id: int) -> None:
+        """Drop a departed host's per-(host, version) stats (§4 churn):
+        they can never be read again — ``proj_flops`` is only consulted for
+        hosts requesting work — and long-churn populations would otherwise
+        accumulate rows forever. Version-level aggregates are kept."""
+        for vid in self._host_versions.pop(host_id, ()):
+            self.host_version.pop((host_id, vid), None)
 
     def peak_flops(self, host: Host, version: AppVersion) -> float:
         ev = version.plan_class.evaluate(host)

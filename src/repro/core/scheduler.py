@@ -27,6 +27,8 @@ import random
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from .adaptive import AdaptiveReplication
 from .allocation import LinearBoundedAllocator
 from .estimation import RuntimeEstimator
@@ -157,14 +159,33 @@ class Feeder:
     # instance_id -> slot position, so the dispatch tail's clear_slot is
     # O(1) instead of a full cache scan per dispatched job
     _slot_idx: Dict[int, int] = field(default_factory=dict, repr=False)
+    # cache-content generation, for the persistent vectorized dispatch
+    # snapshot: bumped whenever slot contents change *outside* the dispatch
+    # tail (a fill, or an explicit invalidate). Dispatch-tail mutations are
+    # reported to the engine as events instead, so they do not invalidate.
+    version: int = 0
+    # persistent BatchDispatchEngine snapshot (built lazily by the
+    # scheduler's vector-dispatch path; shared by all scheduler instances
+    # because they share this cache)
+    _engine: Optional[object] = field(default=None, repr=False)
 
     def __post_init__(self) -> None:
         if not self.slots:
             self.slots = [None] * self.cache_size
 
+    def invalidate(self) -> None:
+        """Force the persistent dispatch snapshot to rebuild. Any code that
+        mutates cache slots or the scoring fields of cached jobs outside the
+        dispatch tail must call this (the feeder's own ``fill`` does)."""
+        self.version += 1
+
     def fill(self) -> int:
-        """One feeder pass; returns slots filled."""
+        """One feeder pass; returns slots filled. Stale slots (instances no
+        longer UNSENT) that cannot be refilled are cleared, so between
+        fills every resident slot references a dispatchable instance — the
+        persistent engine's validity arrays rely on this."""
         in_cache = {s.instance_id for s in self.slots if s is not None}
+        stale = [i for i, s in enumerate(self.slots) if s is not None and self._stale(s)]
         vacancies = [i for i, s in enumerate(self.slots) if s is None or self._stale(s)]
         if not vacancies:
             return 0
@@ -196,6 +217,15 @@ class Feeder:
             in_cache.add(inst.id)
             filled += 1
             ai += 1
+        cleared = 0
+        for i in stale:
+            s = self.slots[i]
+            if s is not None and self._stale(s):
+                self._slot_idx.pop(s.instance_id, None)
+                self.slots[i] = None
+                cleared += 1
+        if filled or cleared:
+            self.invalidate()
         return filled
 
     def _stale(self, slot: CacheSlot) -> bool:
@@ -203,6 +233,9 @@ class Feeder:
         return inst is None or inst.state != InstanceState.UNSENT
 
     def clear_slot(self, instance_id: int) -> None:
+        # no ``invalidate()`` here: the only caller is the dispatch tail,
+        # which reports the mutation to the persistent engine as a
+        # ("dispatch", candidate) event instead
         i = self._slot_idx.pop(instance_id, None)
         if i is not None:
             s = self.slots[i]
@@ -243,6 +276,13 @@ class Scheduler:
     allocator: Optional[LinearBoundedAllocator] = None
     adaptive: Optional[AdaptiveReplication] = None
     seed: int = 0
+    # route *every* request — including singleton RPCs — through the
+    # vectorized dispatch engine, against a persistent cache snapshot that
+    # is maintained incrementally (dispatch-tail events) and rebuilt only
+    # when the feeder's cache generation changes. Bit-identical to the
+    # scalar scan (tests/test_batch_dispatch.py); False keeps the scalar
+    # O(slots²) reference path as the oracle.
+    vector_dispatch: bool = False
     metrics: SchedulerMetrics = field(default_factory=SchedulerMetrics)
     _rng: random.Random = field(default=None, repr=False)  # type: ignore[assignment]
 
@@ -251,8 +291,28 @@ class Scheduler:
 
     # ------------------------------------------------------------------
 
+    def _persistent_engine(self):
+        """The shared persistent dispatch snapshot, rebuilt on cache-content
+        generation changes (feeder fills / explicit invalidations)."""
+        from .batch_dispatch import BatchDispatchEngine  # deferred: avoids cycle
+
+        feeder = self.feeder
+        engine = feeder._engine
+        if engine is None or engine.version != feeder.version:
+            # the constructor stamps the snapshot with feeder.version
+            engine = BatchDispatchEngine(self.store, feeder)
+            feeder._engine = engine
+        return engine
+
     def handle_request(self, req: ScheduleRequest, now: float) -> ScheduleReply:
-        return self._handle_one(req, now, engine=None)
+        if self.vector_dispatch:
+            return self._handle_one(req, now, engine=self._persistent_engine())
+        reply = self._handle_one(req, now, engine=None)
+        # scalar dispatch mutates slots without emitting engine events: any
+        # persistent snapshot other schedulers hold is now stale
+        if self.feeder._engine is not None:
+            self.feeder.invalidate()
+        return reply
 
     def handle_batch(self, reqs: Sequence[ScheduleRequest], now: float) -> List[ScheduleReply]:
         """Dispatch a batch of scheduler RPCs against one cache snapshot.
@@ -265,12 +325,20 @@ class Scheduler:
         tail reports every slot mutation back to the engine as an event so
         later requests in the batch observe taken slots, skip-count bumps,
         and HR / homogeneous-app-version locks exactly as they would under
-        sequential execution.
+        sequential execution. With ``vector_dispatch`` the batch runs
+        against the persistent snapshot; otherwise a fresh snapshot is built
+        per call (the original PR 1 behavior, kept as the oracle).
         """
         from .batch_dispatch import BatchDispatchEngine  # deferred: avoids cycle
 
+        if self.vector_dispatch:
+            engine = self._persistent_engine()
+            return [self._handle_one(req, now, engine=engine) for req in reqs]
         engine = BatchDispatchEngine(self.store, self.feeder)
-        return [self._handle_one(req, now, engine=engine) for req in reqs]
+        replies = [self._handle_one(req, now, engine=engine) for req in reqs]
+        if self.feeder._engine is not None:
+            self.feeder.invalidate()  # slot mutations bypassed the snapshot
+        return replies
 
     def _handle_one(self, req: ScheduleRequest, now: float, engine) -> ScheduleReply:
         """One scheduler RPC; candidates come from the scalar cache scan or,
@@ -301,13 +369,9 @@ class Scheduler:
                 continue
             # same RNG draw as the scalar scan's random start point
             start = self._rng.randrange(engine.n) if engine.n else 0
-            candidates = engine.candidates(self, host, req, rtype, start, now)
-            events: List[Tuple[str, Candidate]] = []
-            disk_left = self._dispatch_resource(
-                host, req, rtype, rreq, reply, disk_left, now,
-                candidates=candidates, events=events,
+            disk_left = self._dispatch_resource_vec(
+                engine, host, req, rtype, rreq, reply, disk_left, now, start
             )
-            engine.apply(events)
         return reply
 
     # ------------------------------------------------------------------
@@ -422,6 +486,113 @@ class Scheduler:
             queue_dur += scaled_rt
             req_runtime -= scaled_rt
             req_idle -= usage.get(rtype, 0.0)
+            if req_runtime <= 0 and req_idle <= 0:
+                break
+        return disk_left
+
+    def _dispatch_resource_vec(
+        self,
+        engine,
+        host: Host,
+        req: ScheduleRequest,
+        rtype: ResourceType,
+        rreq: ResourceRequest,
+        reply: ScheduleReply,
+        disk_left: float,
+        now: float,
+        start: int,
+    ) -> float:
+        """Array-driven dispatch tail for the vectorized engine: identical
+        checks, order, metrics, and slot mutations to
+        :meth:`_dispatch_resource` over ``engine.candidates``, but the
+        fast-check rejections — the overwhelming bulk of the visited
+        candidates — are classified as whole array prefixes (``engine.valid``
+        is exact, see the engine's build-time staleness probe) and skip-bumped
+        through ``engine.bulk_skip`` instead of per-candidate Python."""
+        rows = engine.candidate_rows(self, host, req, rtype, start, now)
+        if rows is None:
+            return disk_left
+        pos, gidx, _scores, est, scaled, choices, disk_c, delay_c = rows
+        queue_dur = rreq.queue_dur
+        req_runtime = rreq.req_runtime
+        req_idle = rreq.req_idle
+        sending_jobs = {d.job.id for d in reply.jobs}
+        metrics = self.metrics
+        slots = engine.slots
+        insts = self.store.instances
+        jobs = self.store.jobs
+        unsent = InstanceState.UNSENT
+        n = len(pos)
+        k = 0
+
+        def bulk_reject(a: int, b: int) -> None:
+            """Candidates [a, b) all failed a disk/deadline fast check: the
+            valid ones get the skip-bump (fast_check_rejects), the rest are
+            cache misses — exactly the scalar per-candidate classification."""
+            if a >= b:
+                return
+            seg = pos[a:b]
+            v = engine.valid[seg]
+            bump = seg[v]
+            miss = len(seg) - len(bump)
+            if miss:
+                metrics.cache_misses += miss
+            if len(bump):
+                metrics.fast_check_rejects += len(bump)
+                engine.bulk_skip(bump)
+
+        while k < n:
+            # vectorized fast checks (§6.4 a/b) over the remaining ranked
+            # candidates at the *current* disk/queue budget — the budget
+            # only changes on a dispatch, so the prefix scan is exact
+            ok = (disk_c[k:] <= disk_left) & (queue_dur + scaled[k:] <= delay_c[k:])
+            hits = np.flatnonzero(ok)
+            if hits.size == 0:
+                bulk_reject(k, n)
+                break
+            m = k + int(hits[0])
+            bulk_reject(k, m)
+            k = m
+            p = int(pos[k])
+            slot = slots[p]
+            inst = insts.get(slot.instance_id)
+            # fast check (§6.4): still unsent? (another scheduler may have taken it)
+            if inst is None or inst.state != unsent or slot.taken:
+                metrics.cache_misses += 1
+                if slot.taken:
+                    engine.valid[p] = False
+                k += 1
+                continue
+            job = jobs.get(slot.job_id)
+            if job is None:
+                k += 1
+                continue  # purged after snapshot build: scalar scan skips it
+            if job.id in sending_jobs:
+                metrics.fast_check_rejects += 1
+                k += 1
+                continue
+
+            slot.taken = True
+            # slow check (§6.4): DB-level conditions
+            if not self._slow_check(job, host):
+                slot.taken = False
+                metrics.slow_check_rejects += 1
+                slot.skipped += 1
+                engine.apply_skip(p, job, slot)
+                k += 1
+                continue
+
+            scaled_rt = scaled[k]
+            choice = choices[int(gidx[k])]
+            self._dispatch(job, inst, host, choice.version, now, reply, float(est[k]))
+            sending_jobs.add(job.id)
+            self.feeder.clear_slot(inst.id)
+            engine.apply_dispatch(p, job)
+            disk_left -= job.disk_bytes
+            queue_dur += scaled_rt
+            req_runtime -= scaled_rt
+            req_idle -= choice.usage.get(rtype, 0.0)
+            k += 1
             if req_runtime <= 0 and req_idle <= 0:
                 break
         return disk_left

@@ -52,6 +52,13 @@ class ProjectServer:
     # validation engine (core/batch_validate.py); False selects the scalar
     # per-job oracle path (the parity reference)
     batch_validate: bool = True
+    # route every scheduler RPC — singletons included — through the
+    # vectorized dispatch engine's persistent cache snapshot
+    # (core/batch_dispatch.py); False keeps the scalar per-request scan and
+    # PR 1's fresh-snapshot-per-batch behavior (the parity reference).
+    # GridSimulation(vector_world=True) flips this on via
+    # :meth:`set_vector_dispatch`.
+    vector_dispatch: bool = False
     purge_delay: float = 0.0  # keep completed rows briefly (§4)
     enabled: DaemonControl = field(default_factory=DaemonControl)
     assimilators: Dict[str, AssimilatorFn] = field(default_factory=dict)
@@ -73,6 +80,7 @@ class ProjectServer:
                 allocator=self.allocator,
                 adaptive=self.adaptive,
                 seed=i,
+                vector_dispatch=self.vector_dispatch,
             )
             for i in range(self.n_scheduler_instances)
         ]
@@ -206,6 +214,12 @@ class ProjectServer:
                 t.tick(now)
             if self.enabled.feeder:
                 self.feeder.fill()  # newly created instances become dispatchable
+            else:
+                # transitions may have staled cached slots (cancelled /
+                # timed-out instances); with the feeder paused no fill will
+                # clear them, so force the persistent dispatch snapshot to
+                # rebuild with its staleness probe
+                self.feeder.invalidate()
         if self.enabled.assimilator:
             self.assimilate(now)
         if self.enabled.file_deleter:
@@ -241,6 +255,26 @@ class ProjectServer:
             n += 1
         return n
 
+    def remove_host(self, host_id: int, now: float = 0.0) -> None:
+        """Device churn (§4): drop the server's scheduling-side traces of
+        the host — the DB row, the estimator's (host, version) runtime
+        stats, and the adaptive-replication reputation row. In-progress
+        instances are left to hit their deadlines and get retried
+        elsewhere. The credit system's per-(host, version) claim stats are
+        deliberately retained: straggler results reported before the
+        departure may still reach validation, and their quorum partners'
+        claims normalize against that history (§7)."""
+        self.store.remove_host(host_id)
+        self.estimator.forget_host(host_id)
+        self.adaptive.forget_host(host_id)
+
+    def set_vector_dispatch(self, flag: bool) -> None:
+        """Flip the persistent-snapshot dispatch path on every scheduler
+        instance (used by ``GridSimulation(vector_world=...)``)."""
+        self.vector_dispatch = flag
+        for s in self.schedulers:
+            s.vector_dispatch = flag
+
     def purge(self, now: float) -> int:
         # the store pops only rows past the retention window (§4): jobs
         # still inside it stay heaped and cost nothing per tick
@@ -248,6 +282,10 @@ class ProjectServer:
         for job in self.store.purgeable_jobs(now - self.purge_delay):
             self.store.purge_job(job)
             n += 1
+        if n:
+            # purged jobs may still be referenced by the persistent dispatch
+            # snapshot's static arrays — force a rebuild
+            self.feeder.invalidate()
         return n
 
     def _update_batches(self, now: float) -> None:

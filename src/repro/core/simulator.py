@@ -10,6 +10,28 @@ This module does exactly that: a deterministic event-driven simulator whose
 host population drives the *actual* ``ProjectServer`` / ``Client`` /
 ``Scheduler`` / ``Transitioner`` code in virtual time. All paper-claim
 benchmarks and the integration tests run on it.
+
+Two event loops share one world. Per-host state (availability,
+generation counters, running-instance accrual, the mirrored client queues)
+lives in the persistent columnar :class:`~repro.core.world.HostArrays`
+(``core/world.py``), maintained incrementally at mutation time. The
+**scalar oracle** (``vector_world=False``) pops one event at a time and
+performs per-host operations against those columns — the parity reference.
+The **vectorized loop** (``vector_world=True``) drains maximal runs of
+same-timestamp, same-kind events (exactly the grouping the oracle's
+coalescing produces, so cross-mode event order is identical), advances
+accrual for every affected host in one fused array pass, detects
+completions as a single mask over the accrual matrix, samples availability
+toggles from FIFO-prefetched exponential draw batches, routes every
+scheduler RPC through the persistent vectorized dispatch snapshot, and
+feeds the batch client engine straight from the world columns. Whole-run
+results — SimMetrics, job states, granted credit — are bit-identical
+between the two loops (``tests/test_world.py``).
+
+``epoch`` quantizes event times up to a fixed grid (0 disables). Both
+loops share the quantization, so parity holds at any epoch; with it, event
+coalescing — and therefore the vectorized loop's advantage — grows with
+the population (``benchmarks/bench_world.py``).
 """
 from __future__ import annotations
 
@@ -39,6 +61,7 @@ from .types import (
     ResourceType,
     ValidateState,
 )
+from .world import HostArrays
 
 # ---------------------------------------------------------------------------
 # Host population model (EmBOINC's "random model")
@@ -150,12 +173,39 @@ _SERVER = "server"
 _CALLBACK = "callback"
 
 
-@dataclass
 class _RunningJob:
-    client_job: ClientJob
-    actual_total: float  # true runtime (scaled), drawn at dispatch
-    accrued: float = 0.0
-    started_at: float = 0.0
+    """A started instance, viewed through the world's accrual columns.
+
+    ``accrued`` and ``actual_total`` live in ``HostArrays`` (slot-major
+    accrual matrix); this object is the per-instance handle scalar code and
+    tests address them through.
+    """
+
+    __slots__ = ("world", "host_id", "client_job", "started_at")
+
+    def __init__(
+        self,
+        world: HostArrays,
+        host_id: int,
+        client_job: ClientJob,
+        started_at: float = 0.0,
+    ) -> None:
+        self.world = world
+        self.host_id = host_id
+        self.client_job = client_job
+        self.started_at = started_at
+
+    @property
+    def accrued(self) -> float:
+        return self.world.get_accrued(self.host_id, self.client_job.instance_id)
+
+    @accrued.setter
+    def accrued(self, value: float) -> None:
+        self.world.set_accrued(self.host_id, self.client_job.instance_id, value)
+
+    @property
+    def actual_total(self) -> float:
+        return self.world.get_total(self.host_id, self.client_job.instance_id)
 
 
 @dataclass
@@ -204,6 +254,8 @@ class GridSimulation:
         corruptor: Optional[Callable[[Any, random.Random], Any]] = None,
         coalesce_rpcs: bool = True,
         batch_clients: bool = True,
+        vector_world: bool = True,
+        epoch: float = 0.0,
     ) -> None:
         self.server = server
         self.specs: Dict[int, HostSpec] = {s.host.id: s for s in population}
@@ -221,7 +273,17 @@ class GridSimulation:
         # through the vectorized host-population engine. Bit-exact with the
         # scalar per-host path (tests/test_batch_client.py).
         self.batch_clients = batch_clients
+        # epoch-batched vectorized event loop over the columnar world state
+        # (see module docstring); False selects the scalar per-event oracle.
+        # The vectorized loop implies RPC coalescing and the batch client
+        # engine, and turns on the server's persistent-snapshot dispatch.
+        self.vector_world = vector_world
+        # event-time quantization grid (0 = continuous): every scheduled
+        # event lands on the next multiple of ``epoch``. Applied in both
+        # loops, so scalar-vs-vector parity holds at any epoch.
+        self.epoch = epoch
         self.client_engine = BatchClientEngine()
+        self.world = HostArrays()
         self.ground_truth = ground_truth or (lambda job_id: float(job_id) * 1.5)
         # real-compute hook (grid runtime): executor(job, host) -> output
         self.executor = executor
@@ -230,17 +292,22 @@ class GridSimulation:
         self.metrics = SimMetrics()
         self._heap: List[Tuple[float, int, str, int]] = []
         self._seq = 0
-        self._gen: Dict[int, int] = {}
         self._event_gen: Dict[int, int] = {}
         self.clients: Dict[int, Client] = {}
-        self.available: Dict[int, bool] = {}
         self.running: Dict[int, Dict[int, _RunningJob]] = {}
-        self._last_update: Dict[int, float] = {}
-        self._instance_meta: Dict[int, Tuple[int, float]] = {}  # iid -> (version_id, actual_total)
+        # iid -> (version_id, actual_total) for *resident* (dispatched, not
+        # yet completed) instances; entries are dropped at completion and
+        # at churn so the map stays O(in-flight work)
+        self._instance_meta: Dict[int, Tuple[int, float]] = {}
+        # lifetime sum of drawn actual runtimes (clamped-accrual invariant:
+        # busy_cpu_seconds can never exceed this)
+        self._dispatched_actual_total = 0.0
         self._wrong_outputs: Dict[int, bool] = {}  # iid -> output was wrong
         self._completed_ok = 0  # instances that ran to completion (SUCCESS reports)
         self._callbacks: Dict[int, Callable[[float], None]] = {}
         self._capacity_accounted = 0.0
+        if vector_world:
+            server.set_vector_dispatch(True)
 
         for spec in population:
             host = spec.host
@@ -258,10 +325,9 @@ class GridSimulation:
             rtypes = tuple(host.resources.keys())
             client.attach(ProjectAttachment(name=server.name, resource_types=rtypes))
             self.clients[host.id] = client
-            self.available[host.id] = True
             self.running[host.id] = {}
-            self._gen[host.id] = 0
-            self._last_update[host.id] = 0.0
+            cpu = host.resources.get(ResourceType.CPU)
+            self.world.add_host(host.id, client, cpu.ninstances if cpu else 0.0)
             self._push(self.rng.uniform(0.0, spec.rpc_poll), _RPC, host.id)
             if spec.avail_off_mean > 0 and spec.avail_on_mean < 1e17:
                 self._push(self.rng.expovariate(1.0 / spec.avail_on_mean), _AVAIL, host.id)
@@ -271,9 +337,15 @@ class GridSimulation:
 
     # -- event plumbing --
 
+    def _quantize(self, t: float) -> float:
+        e = self.epoch
+        if e > 0.0:
+            return math.ceil(t / e) * e
+        return t
+
     def _push(self, t: float, kind: str, host_id: int, gen: int = -1) -> None:
         self._seq += 1
-        heapq.heappush(self._heap, (t, self._seq, kind, host_id))
+        heapq.heappush(self._heap, (self._quantize(t), self._seq, kind, host_id))
         if kind == _COMPLETE:
             self._event_gen[self._seq] = gen
 
@@ -281,12 +353,32 @@ class GridSimulation:
         """Run ``fn(now)`` at virtual time ``t`` (streamed job submission,
         daemon outages, elasticity experiments...)."""
         self._seq += 1
-        heapq.heappush(self._heap, (t, self._seq, _CALLBACK, 0))
+        heapq.heappush(self._heap, (self._quantize(t), self._seq, _CALLBACK, 0))
         self._callbacks[self._seq] = fn
 
     # -- main loop --
 
     def run(self, horizon: float) -> SimMetrics:
+        if self.vector_world:
+            self._run_vector(horizon)
+        else:
+            self._run_scalar(horizon)
+        self.now = horizon
+        # capacity accounting (incremental: run() may be called in windows)
+        dt_cap = horizon - self._capacity_accounted
+        if dt_cap > 0:
+            self.world.add_capacity(dt_cap)
+            self._capacity_accounted = horizon
+        # metric accumulators live in per-host world columns; the totals are
+        # reduced in fixed host order so both loops produce the same floats
+        self.metrics.capacity_cpu_seconds = self.world.capacity_total()
+        self.metrics.busy_cpu_seconds = self.world.busy_total()
+        self.metrics.flops_done = self.world.flops_total()
+        self.server.tick(horizon)
+        return self.metrics
+
+    def _run_scalar(self, horizon: float) -> None:
+        """The per-event oracle loop (the parity reference)."""
         while self._heap and self._heap[0][0] <= horizon:
             t, seq, kind, host_id = heapq.heappop(self._heap)
             if host_id:
@@ -302,7 +394,6 @@ class GridSimulation:
                     while (
                         self._heap
                         and self._heap[0][0] == t
-                        and self._heap[0][0] <= horizon
                         and self._heap[0][2] == _RPC
                     ):
                         _, _, _, hid2 = heapq.heappop(self._heap)
@@ -313,7 +404,7 @@ class GridSimulation:
                 else:
                     self._handle_rpc_batch(batch, t)
             elif kind == _COMPLETE:
-                valid = self._event_gen.pop(seq, -1) == self._gen.get(host_id, 0)
+                valid = self._event_gen.pop(seq, -1) == self.world.gen_of(host_id)
                 hids = [host_id] if valid else []
                 if self.batch_clients:
                     # coalesce same-tick completions into one batched
@@ -325,7 +416,7 @@ class GridSimulation:
                     ):
                         _, seq2, _, hid2 = heapq.heappop(self._heap)
                         self._advance_running(hid2, t)
-                        if self._event_gen.pop(seq2, -1) == self._gen.get(hid2, 0):
+                        if self._event_gen.pop(seq2, -1) == self.world.gen_of(hid2):
                             hids.append(hid2)
                     hids = list(dict.fromkeys(hids))
                 if len(hids) == 1:
@@ -340,17 +431,53 @@ class GridSimulation:
                 fn = self._callbacks.pop(seq, None)
                 if fn is not None:
                     fn(t)
-        self.now = horizon
-        # capacity accounting (incremental: run() may be called in windows)
-        dt_cap = horizon - self._capacity_accounted
-        if dt_cap > 0:
-            for spec in self.specs.values():
-                cpu = spec.host.resources.get(ResourceType.CPU)
-                if cpu:
-                    self.metrics.capacity_cpu_seconds += cpu.ninstances * dt_cap
-            self._capacity_accounted = horizon
-        self.server.tick(horizon)
-        return self.metrics
+
+    def _run_vector(self, horizon: float) -> None:
+        """The epoch-batched vectorized loop. Drains maximal runs of
+        same-timestamp, same-kind events (the identical grouping the oracle
+        loop's coalescing produces), advances every affected host in one
+        fused world pass, then handles the run through the batch engines.
+        All RNG consumers execute in the oracle's per-event order, so
+        whole-run results are bit-identical to :meth:`_run_scalar`."""
+        heap = self._heap
+        world = self.world
+        while heap and heap[0][0] <= horizon:
+            t, seq, kind, host_id = heapq.heappop(heap)
+            if kind == _SERVER:
+                self.now = t
+                self.server.tick(t)
+                self._push(t + self.server_tick_period, _SERVER, 0)
+                continue
+            if kind == _CALLBACK:
+                self.now = t
+                fn = self._callbacks.pop(seq, None)
+                if fn is not None:
+                    fn(t)
+                continue
+            run = [(seq, host_id)]
+            while heap and heap[0][0] == t and heap[0][2] == kind:
+                _, s2, _, h2 = heapq.heappop(heap)
+                run.append((s2, h2))
+            # one fused accrual pass for every host sharing the event time
+            # (duplicates deduped: the oracle's repeat advances are no-ops)
+            world.advance_batch(list(dict.fromkeys(h for _, h in run)), t)
+            self.now = t
+            if kind == _RPC:
+                self._handle_rpc_batch([h for _, h in run], t)
+            elif kind == _COMPLETE:
+                hids = [
+                    h
+                    for s, h in run
+                    if self._event_gen.pop(s, -1) == world.gen_of(h)
+                ]
+                hids = list(dict.fromkeys(hids))
+                if hids:
+                    self._handle_completions_batch(hids, t)
+            elif kind == _AVAIL:
+                self._avail_run(run, t)
+            elif kind == _CHURN:
+                for _, h in run:
+                    self._churn(h, t)
 
     # -- host availability & churn --
 
@@ -358,9 +485,10 @@ class GridSimulation:
         spec = self.specs.get(host_id)
         if spec is None:
             return
-        on = self.available[host_id]
-        self.available[host_id] = not on
-        self._gen[host_id] += 1  # invalidate completion events
+        world = self.world
+        on = world.is_available(host_id)
+        world.set_available(host_id, not on)
+        world.bump_gen(host_id)  # invalidate completion events
         if on:
             nxt = self.rng.expovariate(1.0 / spec.avail_off_mean)
         else:
@@ -368,79 +496,101 @@ class GridSimulation:
             self._reschedule_completions(host_id, t)
         self._push(t + nxt, _AVAIL, host_id)
 
+    def _avail_run(self, run: List[Tuple[int, int]], t: float) -> None:
+        """A same-timestamp run of availability toggles: the exponential
+        next-toggle draws are prefetched as one uniform batch and consumed
+        FIFO, reproducing the oracle's ``rng.expovariate`` stream exactly;
+        the toggles themselves apply sequentially in event order."""
+        specs = self.specs
+        world = self.world
+        world.draws.prefetch(
+            self.rng, sum(1 for _, h in run if h in specs)
+        )
+        for _, host_id in run:
+            spec = specs.get(host_id)
+            if spec is None:
+                continue
+            on = world.is_available(host_id)
+            world.set_available(host_id, not on)
+            world.bump_gen(host_id)
+            if on:
+                nxt = world.draws.draw(self.rng, 1.0 / spec.avail_off_mean)
+            else:
+                nxt = world.draws.draw(self.rng, 1.0 / spec.avail_on_mean)
+                self._reschedule_completions(host_id, t)
+            self._push(t + nxt, _AVAIL, host_id)
+
     def _churn(self, host_id: int, t: float) -> None:
         """Permanent departure: in-progress instances will hit their
-        deadlines and be retried on other hosts (§4)."""
+        deadlines and be retried on other hosts (§4). Every per-host trace
+        — specs, client, running set, world columns, undelivered instance
+        metadata — is purged, so long-churn runs don't leak state."""
         self.specs.pop(host_id, None)
         self.clients.pop(host_id, None)
         self.running.pop(host_id, None)
-        self.available[host_id] = False
-        self.server.store.remove_host(host_id)
+        i = self.world.index.get(host_id)
+        if i is not None:
+            for j in self.world.queue_jobs[i]:
+                self._instance_meta.pop(j.instance_id, None)
+        self.world.remove_host(host_id)
+        self.server.remove_host(host_id, t)
 
     # -- execution model --
 
     def _advance_running(self, host_id: int, t: float) -> None:
-        last = self._last_update.get(host_id, t)
-        self._last_update[host_id] = t
-        if host_id == 0 or not self.available.get(host_id, False):
+        if host_id == 0:
             return
-        running = self.running.get(host_id)
-        if not running:
-            return
-        dt = t - last
-        if dt <= 0:
-            return
-        client = self.clients.get(host_id)
-        for rj in running.values():
-            cj = rj.client_job
-            if cj.state == RunState.RUNNING:
-                rj.accrued += dt
-                cj.runtime += dt
-                total = max(rj.actual_total, 1e-9)
-                cj.fraction_done = min(1.0, rj.accrued / total)
-                self.metrics.busy_cpu_seconds += dt * cj.cpu_usage()
-                if client is not None:
-                    # REC debiting (§6.1): the simulator's accounting path
-                    # must charge project usage like Client.advance does, or
-                    # scheduling priorities stay frozen at their initial
-                    # resource-share values for the whole run. Raw dt: this
-                    # execution model advances jobs at full speed (no §2.4
-                    # throttling), so the charge matches work performed.
-                    client.debit_usage(cj, dt, t)
+        # clamped columnar accrual (world.advance_host performs the same
+        # per-cell IEEE ops as the fused vector pass)
+        self.world.advance_host(host_id, t)
 
     def _reschedule_completions(self, host_id: int, t: float) -> None:
         """(Re)issue completion events for the host's running set."""
-        self._gen[host_id] += 1
-        gen = self._gen[host_id]
-        for rj in self.running.get(host_id, {}).values():
-            if rj.client_job.state == RunState.RUNNING:
-                remaining = max(0.0, rj.actual_total - rj.accrued)
-                self._push(t + remaining, _COMPLETE, host_id, gen)
+        world = self.world
+        gen = world.bump_gen(host_id)
+        i = world.index[host_id]
+        q_total = world.q_total
+        q_runtime = world.q_runtime
+        for row in world.running_rows(host_id):
+            remaining = max(0.0, float(q_total[row, i] - q_runtime[row, i]))
+            self._push(t + remaining, _COMPLETE, host_id, gen)
 
-    def _mark_completions(self, host_id: int, t: float) -> Optional[bool]:
+    def _mark_completions(
+        self, host_id: int, t: float, rows=None
+    ) -> Optional[bool]:
         """Flip finished running jobs to DONE; returns None if the host is
-        gone/unavailable, else whether anything completed."""
+        gone/unavailable, else whether anything completed. ``rows`` may
+        carry precomputed completion rows (the vectorized loop's fused
+        detection mask)."""
         spec = self.specs.get(host_id)
         client = self.clients.get(host_id)
-        if spec is None or client is None or not self.available.get(host_id, False):
+        world = self.world
+        if spec is None or client is None or not world.is_available(host_id):
             return None
+        if rows is None:
+            rows = world.completed_rows(host_id)
+        if len(rows) == 0:
+            return False
+        i = world.index[host_id]
         running = self.running[host_id]
-        done_ids = [
-            iid
-            for iid, rj in running.items()
-            if rj.accrued >= rj.actual_total - 1e-6 and rj.client_job.state == RunState.RUNNING
-        ]
-        for iid in done_ids:
-            rj = running.pop(iid)
-            cj = rj.client_job
+        done_ids = set()
+        for row in rows:
+            cj = world.queue_jobs[i][row]
+            running.pop(cj.instance_id, None)
             cj.state = RunState.DONE
             cj.fraction_done = 1.0
-            client.jobs = [j for j in client.jobs if j.instance_id != iid]
-            client.running = [j for j in client.running if j.instance_id != iid]
+            # authoritative accrual lives in the world column; sync the
+            # object before it is reported (CompletedResult.runtime)
+            cj.runtime = float(world.q_runtime[row, i])
             client.completed.append(cj)
             self.metrics.instances_executed += 1
-            self.metrics.flops_done += cj.est_flop_count
-        return bool(done_ids)
+            world.flops[i] += world.q_efc[row, i]
+            self._instance_meta.pop(cj.instance_id, None)
+            done_ids.add(cj.instance_id)
+        client.jobs = [j for j in client.jobs if j.instance_id not in done_ids]
+        client.running = [j for j in client.running if j.instance_id not in done_ids]
+        world.remove_rows(host_id, rows)
+        return True
 
     def _handle_completions(self, host_id: int, t: float) -> None:
         marked = self._mark_completions(host_id, t)
@@ -458,23 +608,62 @@ class GridSimulation:
         run one batched reschedule for the affected hosts, then do the
         per-host opportunistic report RPCs in the original event order (the
         same server-visible order as sequential handling — client state is
-        host-local, so deferring the reschedules cannot change outcomes)."""
+        host-local, so deferring the reschedules cannot change outcomes).
+        The vectorized loop detects completions as one fused mask over the
+        accrual matrix and precomputes the reporters' work-fetch decisions
+        in one engine pass; the report RPCs themselves stay sequential so
+        every RNG draw happens in oracle order."""
         live: List[int] = []
         to_start: List[int] = []
+        vw = self.vector_world
+        detected = self.world.completed_rows_batch(host_ids) if vw else {}
         for hid in host_ids:
-            marked = self._mark_completions(hid, t)
+            marked = self._mark_completions(hid, t, rows=detected.get(hid))
             if marked is None:
                 continue
             live.append(hid)
             if marked:
                 to_start.append(hid)
         self._start_jobs_batch(to_start, t)
-        for hid in live:
-            client = self.clients.get(hid)
-            if client is None:
-                continue
-            if client.completed and client.should_report(self.server.name, t):
-                self._do_rpc(hid, t, force_report=True)
+        name = self.server.name
+        reporters = [
+            hid
+            for hid in live
+            if (c := self.clients.get(hid)) is not None
+            and c.completed
+            and c.should_report(name, t)
+        ]
+        if not reporters:
+            return
+        needs_map: Dict[int, Dict[ResourceType, ResourceRequest]] = {}
+        if vw:
+            if len(reporters) > 1:
+                needs_map = dict(zip(
+                    reporters,
+                    self.client_engine.needs_work_world(self.world, reporters, t),
+                ))
+            else:
+                # a one-host engine pass costs more than the scalar oracle
+                # call; sync the accrual columns onto the objects and let
+                # _build_request take the (bit-identical) scalar path
+                self.world.sync_objects(reporters)
+        # one coalesced dispatch pass for the whole run's report RPCs (the
+        # request builds and reply applications stay sequential per host,
+        # so every RNG draw happens in the same order in both loops)
+        pending: List[Tuple[int, ScheduleRequest]] = []
+        for hid in reporters:
+            request = self._build_request(
+                hid, t, force_report=True, needs=needs_map.get(hid)
+            )
+            if request is not None:
+                pending.append((hid, request))
+        replies = self.server.rpc_batch([r for _, r in pending], t)
+        to_start = [
+            hid
+            for (hid, request), reply in zip(pending, replies)
+            if self._apply_reply(hid, request, reply, t, start=False)
+        ]
+        self._start_jobs_batch(to_start, t)
 
     def _start_jobs(self, host_id: int, t: float) -> None:
         self._start_jobs_batch([host_id], t)
@@ -482,18 +671,35 @@ class GridSimulation:
     def _start_jobs_batch(self, host_ids: List[int], t: float) -> None:
         if not host_ids:
             return
-        clients = [self.clients[h] for h in host_ids]
-        if self.batch_clients and len(clients) > 1:
-            chosen_lists = self.client_engine.schedule_batch(clients, t)
+        if self.vector_world:
+            if len(host_ids) == 1:
+                # one-host reschedule: the scalar oracle call is cheaper
+                # than an engine pass and bit-identical to it
+                hid = host_ids[0]
+                self.world.sync_objects(host_ids)
+                chosen_lists = [self.clients[hid].schedule(t)]
+                self.world.sync_run_state(hid)
+            else:
+                # fused run-set selection straight off the world columns
+                chosen_lists = self.client_engine.schedule_world(
+                    self.world, host_ids, t
+                )
         else:
-            chosen_lists = [c.schedule(t) for c in clients]
+            clients = [self.clients[h] for h in host_ids]
+            if self.batch_clients and len(clients) > 1:
+                chosen_lists = self.client_engine.schedule_batch(clients, t)
+            else:
+                chosen_lists = [c.schedule(t) for c in clients]
+            for host_id in host_ids:
+                self.world.sync_run_state(host_id)
         for host_id, chosen in zip(host_ids, chosen_lists):
             running = self.running[host_id]
             for cj in chosen:
                 if cj.instance_id not in running:
                     running[cj.instance_id] = _RunningJob(
+                        world=self.world,
+                        host_id=host_id,
                         client_job=cj,
-                        actual_total=self._instance_meta[cj.instance_id][1],
                         started_at=t,
                     )
             self._reschedule_completions(host_id, t)
@@ -504,12 +710,21 @@ class GridSimulation:
         spec = self.specs.get(host_id)
         if spec is None:
             return
-        if self.available.get(host_id, False):
-            self._do_rpc(host_id, t)
+        # push the next poll *before* handling (the batch path's order), so
+        # event sequence numbers — and therefore same-timestamp tie-breaks —
+        # are identical whether a poll was handled alone or in a batch
         self._push(t + spec.rpc_poll, _RPC, host_id)
+        if self.world.is_available(host_id):
+            self._do_rpc(host_id, t)
 
-    def _do_rpc(self, host_id: int, t: float, force_report: bool = False) -> None:
-        request = self._build_request(host_id, t, force_report)
+    def _do_rpc(
+        self,
+        host_id: int,
+        t: float,
+        force_report: bool = False,
+        needs: Optional[Dict[ResourceType, ResourceRequest]] = None,
+    ) -> None:
+        request = self._build_request(host_id, t, force_report, needs=needs)
         if request is None:
             return
         reply = self.server.rpc(request, t)
@@ -520,13 +735,30 @@ class GridSimulation:
         (work-fetch decisions precomputed in one fused WRR pass over the
         whole batch), dispatch them in one ``rpc_batch`` call, apply replies
         in the same order the sequential loop would have, then run one
-        batched reschedule for every host that received jobs."""
+        batched reschedule for every host that received jobs. The
+        vectorized world reads the WRR inputs from the persistent columns;
+        the object-snapshot engine and per-host scalar fallbacks remain for
+        the oracle loop."""
+        world = self.world
         needs_map: Dict[int, Dict[ResourceType, "ResourceRequest"]] = {}
-        if self.batch_clients:
+        if self.vector_world:
             avail = [
                 hid
                 for hid in host_ids
-                if hid in self.specs and self.available.get(hid, False)
+                if hid in self.specs and world.is_available(hid)
+            ]
+            if len(avail) > 1:
+                needs_map = dict(zip(
+                    avail,
+                    self.client_engine.needs_work_world(world, avail, t),
+                ))
+            elif avail:
+                world.sync_objects(avail)  # scalar needs path, bit-identical
+        elif self.batch_clients:
+            avail = [
+                hid
+                for hid in host_ids
+                if hid in self.specs and world.is_available(hid)
             ]
             if len(avail) > 1:
                 batched = self.client_engine.needs_work_batch(
@@ -538,13 +770,13 @@ class GridSimulation:
             spec = self.specs.get(hid)
             if spec is None:
                 continue
-            if self.available.get(hid, False):
+            if world.is_available(hid):
                 request = self._build_request(hid, t, needs=needs_map.get(hid))
                 if request is not None:
                     pending.append((hid, request))
             self._push(t + spec.rpc_poll, _RPC, hid)
         replies = self.server.rpc_batch([r for _, r in pending], t)
-        if self.batch_clients:
+        if self.vector_world or self.batch_clients:
             to_start = [
                 hid
                 for (hid, request), reply in zip(pending, replies)
@@ -634,6 +866,8 @@ class GridSimulation:
             )
             client.jobs.append(cj)
             self._instance_meta[cj.instance_id] = (dj.version.id, actual)
+            self._dispatched_actual_total += actual
+            self.world.add_job(host_id, cj, actual)
         if reply.jobs and start:
             self._start_jobs(host_id, t)
         return bool(reply.jobs)
@@ -707,6 +941,9 @@ class GridSimulation:
         # the audit doubles as the store's index/scan consistency check
         if store.use_indexes:
             store.check_invariants()
+        # ... and the world's column <-> object consistency check (the
+        # scalar loop keeps object accrual in lockstep with the columns)
+        self.world.check_invariants(strict_dynamic=not self.vector_world)
         self._audit_validate_states()
 
     def _audit_validate_states(self) -> None:

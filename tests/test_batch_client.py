@@ -340,7 +340,12 @@ def _sim(batch_clients, n_hosts=24, n_jobs=80, seed=4, **pop_kw):
             Job(id=next_id("job"), app_name="work", est_flop_count=1e12), 0.0
         )
     pop = make_population(n_hosts, seed=seed, **pop_kw)
-    return GridSimulation(server, pop, seed=seed, batch_clients=batch_clients)
+    # vector_world=False: these are the PR 3 batch_clients on/off parity
+    # twins — the vectorized world loop supersedes the flag, so it must be
+    # off for the scalar-client oracle to actually run (the vector loop has
+    # its own parity matrix in tests/test_world.py)
+    return GridSimulation(server, pop, seed=seed, batch_clients=batch_clients,
+                          vector_world=False)
 
 
 def _client_sig(sim):
@@ -416,3 +421,45 @@ def test_simulation_to_completion_with_batch_clients():
         a.total_used for c in sim.clients.values() for a in c.rec.accounts.values()
     )
     assert total_used > 0.0
+
+
+def test_world_snapshot_matches_object_snapshot():
+    """ISSUE 5: the engine's world-backed snapshot (persistent columns,
+    gathered per batch) must be field-for-field bit-identical to the
+    object-materialized snapshot over the same queues — and therefore
+    produce identical WRR outputs and work requests."""
+    import numpy as np
+
+    sim = _sim(True, n_hosts=32, n_jobs=160, seed=9)
+    sim.run(5400.0)
+    world = sim.world
+    hids = [h for h in sim.specs if world.is_available(h)]
+    assert hids
+    engine = sim.client_engine
+    now = sim.now + 30.0
+    # column -> object sync so the object path sees the authoritative
+    # accrual state the world columns carry
+    world.sync_objects(hids)
+    sw = engine._snapshot_world(world, hids, now)
+    so = engine._snapshot([sim.clients[h] for h in hids], now)
+    assert sw.H == so.H and sw.J == so.J
+    assert sw.identity_perm and so.identity_perm
+    np.testing.assert_array_equal(sw.live, so.live)
+    for name in ("rem", "dl", "wss", "slice_start", "chk_time", "prio_j",
+                 "run_state", "nci", "cu"):
+        np.testing.assert_array_equal(
+            getattr(sw, name), getattr(so, name), err_msg=name
+        )
+    for rt in so.rtypes:
+        np.testing.assert_array_equal(sw.usage[rt], so.usage[rt], err_msg=str(rt))
+        np.testing.assert_array_equal(sw.nins[rt], so.nins[rt])
+        np.testing.assert_array_equal(sw.has[rt], so.has[rt])
+    for name in ("ram", "ram_frac", "horizon", "ts", "ncpu"):
+        np.testing.assert_array_equal(getattr(sw, name), getattr(so, name))
+    assert [[j.instance_id for j in q] for q in sw.queued] == [
+        [j.instance_id for j in q] for q in so.queued
+    ]
+    # and the derived outputs coincide exactly
+    needs_w = engine._needs_from_raw(sw, engine._wrr_raw(sw, now))
+    needs_o = engine._needs_from_raw(so, engine._wrr_raw(so, now))
+    assert needs_w == needs_o

@@ -570,3 +570,69 @@ def test_engine_event_bookkeeping():
         positions = engine._job_slots[other.job.id]
         if positions and positions[0] == other.index:
             assert engine.skips[other.index] == other.slot.skipped
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_persistent_engine_matches_scalar_sequential(seed):
+    """ISSUE 5: ``vector_dispatch=True`` routes *every* request — singleton
+    RPCs included — through a persistent cache snapshot that survives
+    across requests (rebuilt only on feeder-generation changes) and an
+    array-prefix dispatch tail. It must stay result- and metrics-identical
+    to the scalar per-request scan across interleaved RPCs, server ticks
+    (feeder refills invalidate the snapshot), and completion reports."""
+    server_a, hosts_a = _make_server(seed)  # scalar reference
+    server_b, hosts_b = _make_server(seed)
+    server_b.set_vector_dispatch(True)
+    rng = random.Random(seed + 31)
+    now = 10.0
+    for rnd in range(4):
+        reqs_a = _make_requests(hosts_a, seed + rnd * 13)
+        reqs_b = _make_requests(hosts_b, seed + rnd * 13)
+        replies_a = [server_a.rpc(r, now) for r in reqs_a]
+        replies_b = [server_b.rpc(r, now) for r in reqs_b]
+        assert _reply_sig(replies_a) == _reply_sig(replies_b)
+        assert _store_sig(server_a) == _store_sig(server_b)
+        assert server_a.schedulers[0].metrics == server_b.schedulers[0].metrics
+        # the snapshot genuinely persists within a round of singleton RPCs
+        assert server_b.feeder._engine is not None
+        comp_a = _completions_from(replies_a, random.Random(seed + rnd))
+        comp_b = _completions_from(replies_b, random.Random(seed + rnd))
+        ra = _make_requests(hosts_a, seed + rnd * 7 + 1)[0]
+        rb = _make_requests(hosts_b, seed + rnd * 7 + 1)[0]
+        ra.completed = comp_a.get(ra.host_id, [])
+        rb.completed = comp_b.get(rb.host_id, [])
+        assert _reply_sig([server_a.rpc(ra, now + 1.0)]) == _reply_sig(
+            [server_b.rpc(rb, now + 1.0)]
+        )
+        now += 600.0
+        server_a.tick(now)
+        server_b.tick(now)
+        assert _store_sig(server_a) == _store_sig(server_b)
+    # a fill that changed the cache must have bumped the generation; the
+    # next RPC rebuilds rather than serving the stale snapshot
+    engine = server_b.feeder._engine
+    assert engine is not None
+    if engine.version != server_b.feeder.version:
+        server_b.rpc(_make_requests(hosts_b, seed)[0], now)
+        assert server_b.feeder._engine.version == server_b.feeder.version
+
+
+def test_persistent_engine_survives_and_rebuilds_on_fill():
+    """The engine object is reused across requests with an unchanged cache
+    and replaced after a feeder fill (version bump)."""
+    server, hosts = _make_server(2, n_jobs=60, n_hosts=6, cache_size=48)
+    server.set_vector_dispatch(True)
+    req = lambda h: ScheduleRequest(  # noqa: E731
+        host_id=h.id,
+        requests={ResourceType.CPU: ResourceRequest(req_runtime=100.0)},
+    )
+    server.rpc(req(hosts[0]), 0.0)
+    e1 = server.feeder._engine
+    assert e1 is not None
+    server.rpc(req(hosts[1]), 0.1)
+    assert server.feeder._engine is e1  # persisted: no cache change
+    server.tick(600.0)  # transition + fill: cache contents change
+    server.rpc(req(hosts[2]), 600.1)
+    e2 = server.feeder._engine
+    assert e2 is not e1
+    assert e2.version == server.feeder.version

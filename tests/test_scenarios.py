@@ -68,12 +68,14 @@ def build_server(batch_validate, adaptive=False, gpu=False, delay_bound=4 * 3600
 def run_scenario(batch_validate, n_jobs=60, n_hosts=12, horizon=2 * DAY,
                  sim_seed=3, pop_seed=1, adaptive=False, gpu=False,
                  delay_bound=4 * 3600.0, est_hours=0.2, waves=1,
-                 wave_period=6 * 3600.0, **pop_kw):
+                 wave_period=6 * 3600.0, vector_world=True, epoch=0.0,
+                 **pop_kw):
     reset_ids()
     server = build_server(batch_validate, adaptive=adaptive, gpu=gpu,
                           delay_bound=delay_bound)
     pop = make_population(n_hosts, seed=pop_seed, horizon=horizon, **pop_kw)
-    sim = GridSimulation(server, pop, seed=sim_seed)
+    sim = GridSimulation(server, pop, seed=sim_seed,
+                         vector_world=vector_world, epoch=epoch)
     per_wave = n_jobs // waves
 
     def submit(now):
@@ -94,20 +96,33 @@ def run_scenario(batch_validate, n_jobs=60, n_hosts=12, horizon=2 * DAY,
     return server, sim, m
 
 
+def _instance_states(server):
+    return {
+        i: (x.validate_state, x.granted_credit)
+        for i, x in server.store.instances.items()
+    }
+
+
 def assert_engine_oracle_identical(kw):
-    """Every scenario's metrics must be identical with batch_validate
-    on/off; returns the (batch-engine) run for golden-bound assertions."""
+    """Every scenario's results must be identical across the engine/oracle
+    axes: batch_validate on/off *and* vector_world on/off (the epoch-batched
+    columnar world loop vs the scalar per-event oracle). Returns the
+    full-engine run for golden-bound assertions."""
     srv_b, sim_b, m_b = run_scenario(True, **dict(kw))
     srv_s, sim_s, m_s = run_scenario(False, **dict(kw))
     assert vars(m_b) == vars(m_s), "engine diverged from scalar oracle"
     assert srv_b.counts() == srv_s.counts()
     assert srv_b.credit.total == srv_s.credit.total
-    assert {
-        i: (x.validate_state, x.granted_credit)
-        for i, x in srv_b.store.instances.items()
-    } == {
-        i: (x.validate_state, x.granted_credit)
-        for i, x in srv_s.store.instances.items()
+    assert _instance_states(srv_b) == _instance_states(srv_s)
+    # the vectorized world loop must reproduce the scalar event loop
+    # bit-for-bit: SimMetrics, job states, granted credit (ISSUE 5)
+    srv_w, sim_w, m_w = run_scenario(True, vector_world=False, **dict(kw))
+    assert vars(m_b) == vars(m_w), "vector world diverged from scalar loop"
+    assert srv_b.counts() == srv_w.counts()
+    assert srv_b.credit.total == srv_w.credit.total
+    assert _instance_states(srv_b) == _instance_states(srv_w)
+    assert {j: x.state for j, x in srv_b.store.jobs.items()} == {
+        j: x.state for j, x in srv_w.store.jobs.items()
     }
     return srv_b, sim_b, m_b
 
