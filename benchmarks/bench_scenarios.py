@@ -1,0 +1,130 @@
+"""Scenario-layer benchmark: generation throughput + adversarial containment
+(§3.4, §7, §9; ROADMAP item 4).
+
+Two claims:
+
+  * **generation is cheap**: building a fully-layered population — trace
+    replay (lognormal sessions + diurnal wave per host), correlated
+    outage splice, clique/farm marking — costs microseconds per host, so
+    scenario setup never dominates an emulation study (rows
+    ``scen_generate/*``).
+  * **the defenses contain the adversaries** (§3.4/§7 end to end): a
+    3-host always-cheating clique against min_quorum=2 + adaptive
+    replication earns zero wrong-accepted canonicals and zero credit, and
+    8x credit farmers gain no per-host advantage over the honest mean.
+    These are the acceptance bits CI asserts (and the same quantities the
+    scenario test matrix golden-pins; the benchmark tracks them as a
+    trajectory across PRs).
+
+Smoke mode (CI): ``--smoke`` / ``BENCH_SCENARIOS_SMOKE=1`` trims the
+generation population and asserts the acceptance record. Results go to
+``benchmarks/BENCH_scenarios.json`` (schema {schema, rows, acceptance}).
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+from .common import RESULTS, emit, timer, write_bench_json
+
+from repro.core import (
+    Clique,
+    CreditFarm,
+    Outage,
+    ScenarioSpec,
+    TraceReplay,
+    generate_population,
+    run_spec,
+)
+
+DAY = 86400.0
+HOUR = 3600.0
+
+
+def _generation_spec(n_hosts: int) -> ScenarioSpec:
+    return ScenarioSpec(
+        name="bench_gen",
+        seed=12,
+        n_hosts=n_hosts,
+        trace=TraceReplay(n_timezones=3),
+        outage=Outage(start=1.0 * DAY, duration=6 * HOUR, fraction=0.4),
+        clique=Clique(size=max(2, n_hosts // 20)),
+        farm=CreditFarm(count=max(1, n_hosts // 50), factor=8.0),
+        correlated_failures=0.2,
+        horizon=3 * DAY,
+    )
+
+
+def run() -> None:
+    smoke = "--smoke" in sys.argv or bool(os.environ.get("BENCH_SCENARIOS_SMOKE"))
+    start_row = len(RESULTS)
+
+    # -- generation throughput --
+    for n_hosts in (500, 2000) if smoke else (2000, 10_000):
+        spec = _generation_spec(n_hosts)
+        t0 = timer()
+        pop = generate_population(spec)
+        dt = timer() - t0
+        assert len(pop) == n_hosts
+        emit(
+            f"scen_generate/{n_hosts}",
+            dt / n_hosts * 1e6,
+            f"layered population in {dt:.3f}s",
+        )
+
+    # -- adversarial containment (deterministic seeds; CI acceptance) --
+    clique = run_spec(
+        ScenarioSpec(
+            name="bench_clique", seed=2, adaptive=True, clique=Clique(size=3),
+            n_jobs=40,
+        )
+    )
+    clique_wrong = clique.metrics.wrong_accepted
+    clique_credit = clique.credit_of_hosts(clique.clique_host_ids())
+    emit(
+        "scen_clique_adaptive/wrong_accepted",
+        float(clique_wrong),
+        f"3-clique vs quorum2+adaptive: {clique.clique_quorum_wins()} quorum wins, "
+        f"{clique_credit:.3f} credit",
+    )
+
+    farm = run_spec(
+        ScenarioSpec(
+            name="bench_farm", seed=9, farm=CreditFarm(count=2, factor=8.0),
+            n_jobs=40, horizon=3 * DAY,
+        )
+    )
+    farm_ids = farm.farm_host_ids()
+    per_farmer = farm.credit_of_hosts(farm_ids) / len(farm_ids)
+    honest = farm.mean_honest_host_credit()
+    emit(
+        "scen_credit_farm/advantage",
+        per_farmer / honest if honest else 0.0,
+        f"8x farmer earns {per_farmer:.3f}/host vs honest {honest:.3f}/host",
+    )
+
+    acceptance = {
+        "clique_wrong_accepted": clique_wrong,
+        "clique_credit": clique_credit,
+        "farm_advantage": per_farmer / honest if honest else 0.0,
+        "pass": bool(
+            clique_wrong == 0
+            and clique_credit == 0.0
+            and honest > 0.0
+            and per_farmer <= 1.5 * honest
+        ),
+    }
+    run.acceptance = acceptance  # picked up by benchmarks.run and CI
+    write_bench_json(
+        path=str(
+            os.path.join(os.path.dirname(__file__), "BENCH_scenarios.json")
+        ),
+        rows=RESULTS[start_row:],
+        extra={"acceptance": acceptance},
+    )
+    if smoke and not acceptance["pass"]:
+        raise SystemExit(f"scenario containment floor failed: {acceptance}")
+
+
+if __name__ == "__main__":
+    run()

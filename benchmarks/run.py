@@ -14,6 +14,8 @@ and their paper sections:
   bench_scheduling  S6.1       EDF override avoids WRR deadline misses
   bench_workfetch   S6.2       buffering bounds RPC rate
   bench_credit      S7         device-neutral credit
+  bench_scenarios   S3.4/S9    scenario layer: generation throughput;
+                               clique/farm adversarial containment
   bench_kernels     (TPU adaptation) Pallas kernels vs oracles
   bench_grid_train  (TPU adaptation) end-to-end fault-tolerant grid training
 
@@ -39,6 +41,7 @@ def main() -> None:
         bench_dispatch,
         bench_grid_train,
         bench_kernels,
+        bench_scenarios,
         bench_scheduling,
         bench_validation,
         bench_workfetch,
@@ -58,6 +61,7 @@ def main() -> None:
         bench_scheduling,
         bench_workfetch,
         bench_credit,
+        bench_scenarios,
         bench_kernels,
         bench_grid_train,
     ):

@@ -18,6 +18,7 @@ Layout (paper section in parens):
   batch_client — vectorized host-population client engine (§6.1–6.2, §9)
   server       — project-server facade w/ daemon set (§5.1)
   simulator    — EmBOINC-style virtual-time emulator (§9)
+  scenarios    — trace-driven & adversarial scenario generation (§3.4, §9)
 """
 from .adaptive import AdaptiveReplication
 from .allocation import LinearBoundedAllocator
@@ -39,6 +40,19 @@ from .scheduler import (
     ScheduleReply,
     ScheduleRequest,
     Scheduler,
+)
+from .scenarios import (
+    Clique,
+    CreditFarm,
+    Outage,
+    ScenarioResult,
+    ScenarioSpec,
+    Sybil,
+    TraceReplay,
+    generate_population,
+    run_parity,
+    run_spec,
+    sybil_identity_ids,
 )
 from .server import ProjectServer
 from .simulator import GridSimulation, HostSpec, make_population
@@ -87,8 +101,10 @@ __all__ = [
     "ClientJob",
     "ClientPrefs",
     "ClientResource",
+    "Clique",
     "CompletedResult",
     "Coordinator",
+    "CreditFarm",
     "CreditSystem",
     "ExponentialBackoff",
     "Feeder",
@@ -106,6 +122,7 @@ __all__ = [
     "JobStore",
     "KeywordPrefs",
     "LinearBoundedAllocator",
+    "Outage",
     "Platform",
     "PlanClass",
     "ProcessingResource",
@@ -114,9 +131,13 @@ __all__ = [
     "ResourceRequest",
     "ResourceType",
     "RuntimeEstimator",
+    "ScenarioResult",
+    "ScenarioSpec",
     "ScheduleReply",
     "ScheduleRequest",
     "Scheduler",
+    "Sybil",
+    "TraceReplay",
     "Transitioner",
     "ValidateState",
     "bitwise_digest_batch",
@@ -125,6 +146,7 @@ __all__ = [
     "default_cpu_plan_class",
     "digest_batch_for",
     "fuzzy_comparator",
+    "generate_population",
     "gpu_plan_class",
     "hr_class",
     "keyword_score",
@@ -132,4 +154,7 @@ __all__ = [
     "next_id",
     "peak_flop_count",
     "reset_ids",
+    "run_parity",
+    "run_spec",
+    "sybil_identity_ids",
 ]

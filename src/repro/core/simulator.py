@@ -38,6 +38,7 @@ from __future__ import annotations
 import heapq
 import math
 import random
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -83,6 +84,20 @@ class HostSpec:
     avail_off_mean: float = 4 * 3600.0
     churn_time: Optional[float] = None  # permanent departure (device churn)
     rpc_poll: float = 600.0
+    # -- scenario-layer extensions (core/scenarios.py) --
+    # Colluding clique id: malicious hosts sharing a group fabricate the
+    # *identical* wrong payload per job, so they validate each other
+    # (quorum defeat, §3.4's attack model). None => independent corruption.
+    collusion_group: Optional[int] = None
+    # Credit farming: reported peak_flop_count is inflated by this factor
+    # (the §7 normalization/outlier-robust grant is the defense under test).
+    claim_factor: float = 1.0
+    # Trace-replayed availability: absolute toggle times (host starts
+    # online; each time flips the state). When set, availability is driven
+    # entirely by this schedule — no RNG draws — so trace-driven runs keep
+    # scalar/vector RNG-stream parity trivially. Exhausted schedules leave
+    # the host in its final state.
+    avail_schedule: Optional[Tuple[float, ...]] = None
 
 
 def make_population(
@@ -306,34 +321,56 @@ class GridSimulation:
         self._completed_ok = 0  # instances that ran to completion (SUCCESS reports)
         self._callbacks: Dict[int, Callable[[float], None]] = {}
         self._capacity_accounted = 0.0
+        # remaining trace-schedule toggle times per host (consumed FIFO)
+        self._avail_sched: Dict[int, "deque[float]"] = {}
         if vector_world:
             server.set_vector_dispatch(True)
 
         for spec in population:
-            host = spec.host
-            server.add_host(host)
-            resources = {
-                rt: ClientResource(rt, r.ninstances, r.peak_flops, r.availability)
-                for rt, r in host.resources.items()
-            }
-            client = Client(
-                host_id=host.id,
-                resources=resources,
-                prefs=ClientPrefs(buffer_lo_days=0.05, buffer_hi_days=0.2),
-                ram_bytes=host.ram_bytes,
-            )
-            rtypes = tuple(host.resources.keys())
-            client.attach(ProjectAttachment(name=server.name, resource_types=rtypes))
-            self.clients[host.id] = client
-            self.running[host.id] = {}
-            cpu = host.resources.get(ResourceType.CPU)
-            self.world.add_host(host.id, client, cpu.ninstances if cpu else 0.0)
-            self._push(self.rng.uniform(0.0, spec.rpc_poll), _RPC, host.id)
-            if spec.avail_off_mean > 0 and spec.avail_on_mean < 1e17:
-                self._push(self.rng.expovariate(1.0 / spec.avail_on_mean), _AVAIL, host.id)
-            if spec.churn_time is not None:
-                self._push(spec.churn_time, _CHURN, host.id)
+            self._register_host(spec, 0.0)
         self._push(0.0, _SERVER, 0)
+
+    def _register_host(self, spec: HostSpec, now: float) -> None:
+        host = spec.host
+        self.specs[host.id] = spec
+        self.server.add_host(host)
+        resources = {
+            rt: ClientResource(rt, r.ninstances, r.peak_flops, r.availability)
+            for rt, r in host.resources.items()
+        }
+        client = Client(
+            host_id=host.id,
+            resources=resources,
+            prefs=ClientPrefs(buffer_lo_days=0.05, buffer_hi_days=0.2),
+            ram_bytes=host.ram_bytes,
+        )
+        rtypes = tuple(host.resources.keys())
+        client.attach(ProjectAttachment(name=self.server.name, resource_types=rtypes))
+        self.clients[host.id] = client
+        self.running[host.id] = {}
+        cpu = host.resources.get(ResourceType.CPU)
+        self.world.add_host(host.id, client, cpu.ninstances if cpu else 0.0)
+        self._push(now + self.rng.uniform(0.0, spec.rpc_poll), _RPC, host.id)
+        if spec.avail_schedule is not None:
+            # trace replay: availability toggles come from the schedule,
+            # never from the RNG stream (scalar/vector draw parity)
+            sched = deque(t for t in spec.avail_schedule if t > now)
+            self._avail_sched[host.id] = sched
+            if sched:
+                self._push(sched.popleft(), _AVAIL, host.id)
+        elif spec.avail_off_mean > 0 and spec.avail_on_mean < 1e17:
+            self._push(now + self.rng.expovariate(1.0 / spec.avail_on_mean), _AVAIL, host.id)
+        if spec.churn_time is not None:
+            self._push(spec.churn_time, _CHURN, host.id)
+
+    def add_host_spec(self, spec: HostSpec, now: float) -> None:
+        """Register a volunteer mid-run (device arrival — or a Sybil
+        churn-and-rejoin identity presenting a fresh host id, §3.4). The
+        host id must be unused: churned slots are never recycled, which is
+        exactly what makes Sybil identity-shedding observable."""
+        if spec.host.id in self.world.index:
+            raise ValueError(f"host id {spec.host.id} was already registered")
+        self._register_host(spec, now)
 
     # -- event plumbing --
 
@@ -481,9 +518,25 @@ class GridSimulation:
 
     # -- host availability & churn --
 
+    def _toggle_scheduled(self, host_id: int, t: float) -> None:
+        """Trace-schedule toggle: flip the state, push the next scheduled
+        time (if any), and touch no RNG stream."""
+        world = self.world
+        on = world.is_available(host_id)
+        world.set_available(host_id, not on)
+        world.bump_gen(host_id)  # invalidate completion events
+        if not on:
+            self._reschedule_completions(host_id, t)
+        sched = self._avail_sched.get(host_id)
+        if sched:
+            self._push(sched.popleft(), _AVAIL, host_id)
+
     def _toggle_availability(self, host_id: int, t: float) -> None:
         spec = self.specs.get(host_id)
         if spec is None:
+            return
+        if spec.avail_schedule is not None:
+            self._toggle_scheduled(host_id, t)
             return
         world = self.world
         on = world.is_available(host_id)
@@ -500,15 +553,25 @@ class GridSimulation:
         """A same-timestamp run of availability toggles: the exponential
         next-toggle draws are prefetched as one uniform batch and consumed
         FIFO, reproducing the oracle's ``rng.expovariate`` stream exactly;
-        the toggles themselves apply sequentially in event order."""
+        the toggles themselves apply sequentially in event order.
+        Trace-scheduled hosts consume no draws (in either loop), so they
+        are excluded from the prefetch count."""
         specs = self.specs
         world = self.world
         world.draws.prefetch(
-            self.rng, sum(1 for _, h in run if h in specs)
+            self.rng,
+            sum(
+                1
+                for _, h in run
+                if (s := specs.get(h)) is not None and s.avail_schedule is None
+            ),
         )
         for _, host_id in run:
             spec = specs.get(host_id)
             if spec is None:
+                continue
+            if spec.avail_schedule is not None:
+                self._toggle_scheduled(host_id, t)
                 continue
             on = world.is_available(host_id)
             world.set_available(host_id, not on)
@@ -528,6 +591,7 @@ class GridSimulation:
         self.specs.pop(host_id, None)
         self.clients.pop(host_id, None)
         self.running.pop(host_id, None)
+        self._avail_sched.pop(host_id, None)
         i = self.world.index.get(host_id)
         if i is not None:
             for j in self.world.queue_jobs[i]:
@@ -897,7 +961,10 @@ class GridSimulation:
             truth = self.ground_truth(cj.job_id)
         wrong = False
         if spec.malicious and self.rng.random() < spec.cheat_prob:
-            output, wrong = self._corrupt(truth), True
+            if spec.collusion_group is not None:
+                output, wrong = self._collude(spec.collusion_group, cj, truth), True
+            else:
+                output, wrong = self._corrupt(truth), True
         elif self.rng.random() < spec.error_prob:
             output, wrong = self._corrupt(truth), True
         else:
@@ -905,6 +972,10 @@ class GridSimulation:
         self._wrong_outputs[cj.instance_id] = wrong
         self._completed_ok += 1
         pfc = peak_flop_count(cj.runtime, cj.usage, spec.host)
+        if spec.claim_factor != 1.0:
+            # credit farming (§7 attack model): the host reports inflated
+            # peak FLOPS; validation still sees the *correct* output
+            pfc *= spec.claim_factor
         return CompletedResult(
             instance_id=cj.instance_id,
             outcome=InstanceOutcome.SUCCESS,
@@ -919,6 +990,23 @@ class GridSimulation:
         if isinstance(truth, float):
             return truth + self.rng.uniform(1.0, 2.0)
         return ("corrupt", self.rng.random())
+
+    def _collude(self, group: int, cj: ClientJob, truth: Any) -> Any:
+        """Colluding-clique payload (§3.4 attack model): a deterministic
+        function of (group, job) — every clique member fabricates the
+        *identical* wrong result, so replicated instances landing on two
+        clique hosts agree and can win the quorum. Consumes no RNG draws
+        (the decision draw in ``_make_result`` already happened), so both
+        event loops see identical streams."""
+        if isinstance(truth, float):
+            return truth + 64.0 + float(group)
+        return ("collude", group, cj.job_id)
+
+    def was_wrong(self, instance_id: int) -> bool:
+        """Whether the given instance returned a wrong output (ground truth
+        known only to the emulator — used by the scenario layer to measure
+        error credit and quorum defeats)."""
+        return self._wrong_outputs.get(instance_id, False)
 
     # -- end-of-run audit --
 

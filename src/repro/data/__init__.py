@@ -1,3 +1,28 @@
 from .pipeline import DataConfig, DataShard, global_batch, make_batch
+from .traces import (
+    Session,
+    TraceFit,
+    apply_outage,
+    fit_trace,
+    intervals_to_toggles,
+    load_bundled_trace,
+    load_trace,
+    synthesize_toggles,
+    toggles_to_intervals,
+)
 
-__all__ = ["DataConfig", "DataShard", "global_batch", "make_batch"]
+__all__ = [
+    "DataConfig",
+    "DataShard",
+    "Session",
+    "TraceFit",
+    "apply_outage",
+    "fit_trace",
+    "global_batch",
+    "intervals_to_toggles",
+    "load_bundled_trace",
+    "load_trace",
+    "make_batch",
+    "synthesize_toggles",
+    "toggles_to_intervals",
+]

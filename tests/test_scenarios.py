@@ -1,246 +1,636 @@
-"""End-to-end scenario matrix (§9): deterministic-seed EmBOINC-style runs
-across the deployment regimes the paper's reliability story targets — churn,
-malicious hosts, heterogeneous fleets, adaptive replication, intermittent
-availability, long-horizon quiescence — asserting golden bounds on
-SimMetrics (error_rate, replication_overhead, idle_fraction) and that the
-batch validation engine reproduces the scalar oracle's metrics exactly in
-every scenario.
+"""Scenario matrix (§3.4, §9): trace-driven & adversarial populations.
 
-EmBOINC-style simulation studies (cf. Anderson & Fedak, "The Computational
-and Storage Potential of Volunteer Computing") hinge on exactly these
-replication-overhead and accepted-error metrics; this suite pins them.
+PRs 1–5 guarded the engines with 7 hand-written synthetic scenarios. This
+matrix replaces them with ~24 declarative :class:`ScenarioSpec` cases —
+the originals ported verbatim, plus trace-replayed availability (diurnal
+timezone waves, heavy-tailed sessions, correlated outages fitted from the
+bundled ``host_sessions.csv`` trace) and the hostile populations §3.4's
+replication/adaptive-validation design exists to defeat: colluding
+cliques, Sybil churn-and-rejoin identities, credit farmers,
+availability-correlated failures.
+
+Every case runs through :func:`repro.core.run_parity`: the batch
+validation engine vs the scalar oracle AND the vectorized world loop vs
+the scalar event loop must produce identical SimMetrics, server counts,
+credit totals, per-instance validate states, and job states — then the
+scenario's golden bounds are checked on the (provably shared) result.
+All scenarios are deterministic from their spec's seed.
+
+Key empirical finding pinned here (seed_sweep_* + clique_half_fleet):
+quorum-2 replication rejects every fabricated result from *independent*
+cheaters, and a 3-of-12 clique on an always-on fleet never wins — but
+once availability starvation (trace replay) or clique mass (≥ half the
+fleet) concentrates both replicas of a job inside the clique, matching
+wrong payloads validate each other and quorum is defeated. Adaptive
+replication does NOT close this hole (see the TODO bound in
+``test_clique_defense_regression``).
+
+The per-scenario reports are dumped to ``benchmarks/SCENARIO_report.json``
+for the CI artifact.
 """
+import json
+import os
+
 import pytest
 
 from repro.core import (
-    App,
-    AppVersion,
-    GridSimulation,
-    Job,
-    JobState,
-    Platform,
-    ProjectServer,
-    default_cpu_plan_class,
-    fuzzy_comparator,
-    gpu_plan_class,
-    make_population,
-    next_id,
-    reset_ids,
+    Clique,
+    CreditFarm,
+    Outage,
+    ScenarioSpec,
+    Sybil,
+    TraceReplay,
+    ValidateState,
+    run_parity,
+    run_spec,
+    sybil_identity_ids,
+)
+from repro.core.scenarios import DAY, HOUR, SYBIL_ID_BASE, generate_population
+from repro.data import toggles_to_intervals
+
+REPORT_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "benchmarks",
+    "SCENARIO_report.json",
 )
 
-DAY = 86400.0
+_REPORTS = []
 
 
-def build_server(batch_validate, adaptive=False, gpu=False, delay_bound=4 * 3600.0):
-    server = ProjectServer(name="p", purge_delay=1e18, batch_validate=batch_validate)
-    app = App(
-        name="w",
-        min_quorum=2,
-        init_ninstances=2,
-        delay_bound=delay_bound,
-        adaptive_replication=adaptive,
-        comparator=fuzzy_comparator(rtol=1e-6, atol=1e-9),
+@pytest.fixture(scope="module", autouse=True)
+def _report_sink():
+    """Collect every scenario's golden-bound report; dump the artifact."""
+    yield _REPORTS
+    if _REPORTS:
+        os.makedirs(os.path.dirname(REPORT_PATH), exist_ok=True)
+        with open(REPORT_PATH, "w") as f:
+            json.dump({"scenarios": sorted(_REPORTS, key=lambda r: r["name"])},
+                      f, indent=2)
+
+
+# ---------------------------------------------------------------------------
+# the matrix: spec -> golden-bound check (run via the 3-axis parity harness)
+# ---------------------------------------------------------------------------
+
+SCENARIOS = {}
+
+
+def scenario(spec):
+    def register(check):
+        assert spec.name not in SCENARIOS
+        SCENARIOS[spec.name] = (spec, check)
+        return check
+    return register
+
+
+# -- ported originals (PRs 1-5's hand-written matrix, now spec-declared) --
+
+@scenario(ScenarioSpec(name="quiescence", horizon=3 * DAY))
+def _check_quiescence(r):
+    """Clean dedicated grid, generous horizon: everything validates and the
+    plant goes quiescent at the quorum-2 overhead floor."""
+    counts = r.server.counts()
+    assert counts["jobs_success"] == 60
+    assert counts["jobs_failure"] == 0
+    assert r.metrics.error_rate == 0.0
+    assert 2.0 <= r.metrics.replication_overhead <= 2.3
+    assert counts["instances_in_progress"] == 0
+    assert counts["instances_unsent"] == 0
+    assert r.metrics.idle_fraction > 0.5
+
+
+@scenario(ScenarioSpec(name="high_churn", n_hosts=16, churn_rate=1.0 / (1.5 * DAY),
+                       horizon=5 * DAY, delay_bound=8 * HOUR, est_hours=1.5))
+def _check_high_churn(r):
+    """Hosts permanently depart mid-run (§4): deadlines fire, retries land
+    on survivors, the work completes at an overhead premium."""
+    assert r.server.counts()["jobs_success"] >= 56
+    assert r.metrics.error_rate == 0.0
+    assert 2.0 <= r.metrics.replication_overhead <= 2.5
+    assert len(r.sim.specs) < 8  # most of the fleet actually left
+    assert sum(t.metrics.timeouts for t in r.server.transitioners) > 0
+
+
+@scenario(ScenarioSpec(name="malicious_independent", malicious_fraction=0.05,
+                       error_prob=0.01, horizon=3 * DAY))
+def _check_malicious_independent(r):
+    """5% *independently* malicious volunteers (§3.4): quorum-2 replication
+    rejects every fabricated result (contrast with the clique cases)."""
+    assert r.metrics.wrong_accepted == 0
+    assert r.metrics.error_rate == 0.0
+    assert r.server.counts()["jobs_success"] >= 55
+    assert r.metrics.replication_overhead > 2.0
+
+
+@scenario(ScenarioSpec(name="cpu_gpu_mix", gpu=True, gpu_fraction=0.5,
+                       n_jobs=80, est_hours=0.4))
+def _check_cpu_gpu_mix(r):
+    """Mixed CPU/GPU fleet (§3.1 plan classes) validates cross-device via
+    the fuzzy comparator."""
+    assert r.server.counts()["jobs_success"] == 80
+    assert r.metrics.error_rate == 0.0
+    gpu_versions = {
+        v.id for v in r.server.store.apps["w"].versions
+        if v.plan_class.name.startswith("gpu")
+    }
+    assert any(i.app_version_id in gpu_versions
+               for i in r.server.store.instances.values())
+
+
+@scenario(ScenarioSpec(name="low_availability", availability=0.6, horizon=4 * DAY))
+def _check_low_availability(r):
+    """~60% exponential availability (§1.1): throughput drops, correctness
+    holds."""
+    assert r.server.counts()["jobs_success"] >= 55
+    assert r.metrics.error_rate == 0.0
+    assert r.metrics.idle_fraction >= 0.35
+
+
+@scenario(ScenarioSpec(name="error_prone", error_prob=0.05, horizon=3 * DAY))
+def _check_error_prone(r):
+    """Flaky hardware corrupting 5% of results: replication filters all of
+    it."""
+    assert r.metrics.wrong_accepted == 0
+    assert r.server.counts()["jobs_success"] >= 55
+    assert r.metrics.replication_overhead > 2.0
+    assert any(i.validate_state == ValidateState.INVALID
+               for i in r.server.store.instances.values())
+
+
+# -- trace-driven availability (repro.data.traces replay) --
+
+@scenario(ScenarioSpec(name="trace_diurnal_3tz", seed=5,
+                       trace=TraceReplay(n_timezones=3), horizon=3 * DAY))
+def _check_trace_diurnal_3tz(r):
+    """Replayed trace availability, 3 timezone waves: the fleet is online
+    ~2/3 of the time in rolling waves; work still completes cleanly."""
+    assert all(s.avail_schedule is not None for s in r.population)
+    assert r.server.counts()["jobs_success"] == 60
+    assert r.metrics.wrong_accepted == 0
+    assert 2.0 <= r.metrics.replication_overhead <= 2.2
+    assert r.metrics.idle_fraction > 0.9
+
+
+@scenario(ScenarioSpec(name="trace_single_tz", seed=6,
+                       trace=TraceReplay(n_timezones=1), horizon=3 * DAY))
+def _check_trace_single_tz(r):
+    """One timezone: the whole fleet sleeps together — the worst-case
+    diurnal trough — and the backlog still drains by the horizon."""
+    assert r.server.counts()["jobs_success"] == 60
+    assert r.metrics.wrong_accepted == 0
+    assert r.metrics.replication_overhead <= 2.3
+
+
+@scenario(ScenarioSpec(name="trace_heavy_tail", seed=7,
+                       trace=TraceReplay(diurnal=False, scale=0.6), horizon=3 * DAY))
+def _check_trace_heavy_tail(r):
+    """Heavy-tailed lognormal sessions without the diurnal wave (pure
+    session-length effect), compressed 0.6x for faster mixing."""
+    assert r.server.counts()["jobs_success"] == 60
+    assert r.metrics.wrong_accepted == 0
+    assert r.metrics.replication_overhead <= 2.2
+
+
+@scenario(ScenarioSpec(name="trace_outage", seed=5, trace=TraceReplay(n_timezones=3),
+                       outage=Outage(start=0.75 * DAY, duration=6 * HOUR, fraction=0.5),
+                       horizon=3 * DAY))
+def _check_trace_outage(r):
+    """Correlated outage on top of trace replay: half the fleet loses power
+    simultaneously for 6h; the schedule splice keeps them all dark."""
+    spec = r.spec
+    dark = [s for s in r.population
+            if not any(a < spec.outage.start + spec.outage.duration
+                       and b > spec.outage.start
+                       for a, b in toggles_to_intervals(s.avail_schedule, spec.horizon))]
+    assert len(dark) >= spec.n_hosts // 2  # the hit half plus chance sleepers
+    assert r.server.counts()["jobs_success"] == 60
+    assert r.metrics.wrong_accepted == 0
+
+
+@scenario(ScenarioSpec(name="blackout_half", seed=3,
+                       outage=Outage(start=1.0 * DAY, duration=8 * HOUR, fraction=0.5),
+                       horizon=3 * DAY))
+def _check_blackout_half(r):
+    """Outage layer on an otherwise always-on fleet: exactly the hit half
+    gets a forced 8h window, everyone else never toggles."""
+    scheduled = [s for s in r.population if s.avail_schedule is not None]
+    assert len(scheduled) == 6
+    assert all(s.avail_schedule == (1.0 * DAY, 1.0 * DAY + 8 * HOUR)
+               for s in scheduled)
+    assert r.server.counts()["jobs_success"] == 60
+    assert r.metrics.wrong_accepted == 0
+
+
+@scenario(ScenarioSpec(name="trace_adaptive", seed=5, trace=TraceReplay(n_timezones=2),
+                       adaptive=True, n_jobs=80, horizon=3 * DAY))
+def _check_trace_adaptive(r):
+    """Adaptive replication under realistic availability: overhead still
+    trends toward the §3.4 target without accepting errors."""
+    assert r.server.counts()["jobs_success"] == 80
+    assert r.metrics.wrong_accepted == 0
+    assert r.metrics.replication_overhead <= 2.2
+
+
+@scenario(ScenarioSpec(name="correlated_failures", seed=8,
+                       trace=TraceReplay(n_timezones=3),
+                       correlated_failures=0.3, horizon=3 * DAY))
+def _check_correlated_failures(r):
+    """Failures correlated with poor availability: the least-available
+    quartile also corrupts 30% of its results (failing flash, dying PSU)."""
+    flaky = [s for s in r.population if s.error_prob == 0.3]
+    assert len(flaky) == r.spec.n_hosts // 4
+    assert r.server.counts()["jobs_success"] == 60
+    assert r.metrics.wrong_accepted == 0
+    assert r.metrics.replication_overhead > 2.0  # corruption forced retries
+
+
+# -- adversarial populations --
+
+@scenario(ScenarioSpec(name="clique_pair", seed=2, clique=Clique(size=2), n_jobs=40))
+def _check_clique_pair(r):
+    """2-host clique vs quorum-2 on an always-on 12-host fleet: the
+    scheduler's one-instance-per-host rule means both replicas must land on
+    the 2 cliquers — never happens here; zero credit leaks."""
+    assert r.metrics.wrong_accepted == 0
+    assert r.clique_quorum_wins() == 0
+    assert r.credit_of_hosts(r.clique_host_ids()) == 0.0
+    assert r.server.counts()["jobs_success"] == 40
+
+
+@scenario(ScenarioSpec(name="clique_triple_adaptive", seed=2, adaptive=True,
+                       clique=Clique(size=3), n_jobs=40))
+def _check_clique_triple_adaptive(r):
+    """Satellite regression: 3-host clique with matching wrong payloads vs
+    min_quorum=2 honest replicas, adaptive replication ON. Current
+    behavior: always-cheating cliquers never build reputation, every job
+    still replicates, and no wrong result wins quorum."""
+    assert r.metrics.wrong_accepted == 0
+    assert r.clique_quorum_wins() == 0
+    assert r.credit_of_hosts(r.clique_host_ids()) == 0.0
+    assert r.wrong_credit() == 0.0
+    assert r.server.counts()["jobs_success"] == 40
+
+
+@scenario(ScenarioSpec(name="clique_half_fleet", seed=2, clique=Clique(size=6),
+                       n_jobs=40))
+def _check_clique_half_fleet(r):
+    """6-of-12 clique: with half the fleet colluding, both replicas of a
+    job frequently land inside the clique and the matching wrong payloads
+    validate each other — quorum is structurally defeated (seed-pinned
+    golden; see test_clique_defense_regression for the TODO bound)."""
+    assert r.metrics.wrong_accepted == 9
+    assert r.clique_quorum_wins() == 9
+    assert 0.0 < r.wrong_credit() <= 8.0
+    assert r.server.counts()["jobs_success"] == 40
+
+
+@scenario(ScenarioSpec(name="clique_small_fleet", seed=2, n_hosts=6,
+                       clique=Clique(size=3), n_jobs=40))
+def _check_clique_small_fleet(r):
+    """3-of-6 clique — same story at half scale (seed-pinned golden)."""
+    assert r.metrics.wrong_accepted == 4
+    assert r.clique_quorum_wins() == 4
+    assert r.server.counts()["jobs_success"] == 40
+
+
+@scenario(ScenarioSpec(name="sybil_rejoin", seed=4, adaptive=True,
+                       sybil=Sybil(), n_jobs=40, waves=8, wave_period=6 * HOUR))
+def _check_sybil_rejoin(r):
+    """Sybil churn-and-rejoin under adaptive replication: the fresh
+    identity presents, gets work, and earns nothing (deep purge-path
+    asserts live in test_sybil_rejoin_regression)."""
+    new_id = sybil_identity_ids(r.spec)[0]
+    assert new_id in r.sim.world.index
+    assert any(i.host_id == new_id for i in r.server.store.instances.values())
+    assert r.metrics.wrong_accepted == 0
+    assert r.wrong_credit() == 0.0
+    assert r.server.counts()["jobs_success"] == 40
+
+
+@scenario(ScenarioSpec(name="sybil_serial", seed=4, adaptive=True, n_jobs=60,
+                       horizon=3 * DAY, waves=12, wave_period=6 * HOUR,
+                       sybil=Sybil(churn_at=0.5 * DAY, rejoin_at=0.75 * DAY,
+                                   rejoins=3, period=0.5 * DAY)))
+def _check_sybil_serial(r):
+    """Serial Sybil: three fresh identities in sequence, each shedding the
+    last one's (non-)reputation. Each gets work; none of them ever wins."""
+    ids = sybil_identity_ids(r.spec)
+    assert len(ids) == 3
+    assert all(i in r.sim.world.index for i in ids)
+    by_host = {i: 0 for i in ids}
+    for inst in r.server.store.instances.values():
+        if inst.host_id in by_host:
+            by_host[inst.host_id] += 1
+    assert all(n > 0 for n in by_host.values())
+    assert r.metrics.wrong_accepted == 0
+    assert r.credit_of_hosts(ids) == 0.0
+    assert r.server.counts()["jobs_success"] == 60
+
+
+@scenario(ScenarioSpec(name="credit_farm", seed=9, farm=CreditFarm(count=2, factor=8.0),
+                       n_jobs=40, horizon=3 * DAY))
+def _check_credit_farm(r):
+    """Credit farmers inflate claimed PFC 8x while computing correctly.
+    §7's claim normalization + outlier-robust granting means the inflation
+    does NOT pay: per-farmer credit stays at/below the honest mean."""
+    farm = r.farm_host_ids()
+    assert len(farm) == 2
+    per_farmer = r.credit_of_hosts(farm) / len(farm)
+    honest = r.mean_honest_host_credit()
+    assert 0.0 < per_farmer <= 1.5 * honest
+    # the residual lie is still visible (claimed > granted on farmer
+    # instances) but §7's host normalization has already absorbed most of
+    # the 8x inflation before granting even sees it
+    claimed = granted = 0.0
+    for i in r.server.store.instances.values():
+        if i.host_id in farm:
+            claimed += i.claimed_credit
+            granted += max(0.0, i.granted_credit)
+    assert 1.3 * granted < claimed < 3.0 * granted
+    assert r.metrics.wrong_accepted == 0
+    assert r.server.counts()["jobs_success"] == 40
+
+
+@scenario(ScenarioSpec(name="farm_adaptive", seed=9, adaptive=True,
+                       farm=CreditFarm(count=3, factor=16.0), error_prob=0.01,
+                       n_jobs=60, horizon=3 * DAY))
+def _check_farm_adaptive(r):
+    """16x farmers under adaptive replication on a mildly flaky fleet:
+    still no payoff."""
+    farm = r.farm_host_ids()
+    assert len(farm) == 3
+    per_farmer = r.credit_of_hosts(farm) / len(farm)
+    assert 0.0 < per_farmer <= 1.5 * r.mean_honest_host_credit()
+    assert r.metrics.wrong_accepted == 0
+    assert r.server.counts()["jobs_success"] == 60
+
+
+@scenario(ScenarioSpec(name="kitchen_sink", seed=10, trace=TraceReplay(n_timezones=3),
+                       clique=Clique(size=3), farm=CreditFarm(count=2, factor=8.0),
+                       correlated_failures=0.2, churn_rate=1.0 / (6 * DAY),
+                       horizon=3 * DAY, n_jobs=60))
+def _check_kitchen_sink(r):
+    """Everything at once: trace waves + churn + correlated failures +
+    clique + farmers. Work completes; adversarial leakage stays bounded."""
+    counts = r.server.counts()
+    assert counts["jobs_success"] == 60
+    assert counts["jobs_failure"] == 0
+    assert len(r.sim.specs) < r.spec.n_hosts  # churn happened
+    assert r.metrics.wrong_accepted <= 4  # availability-starved clique wins a few
+    assert r.clique_quorum_wins() == r.metrics.wrong_accepted
+    assert r.wrong_credit() <= 2.0
+
+
+# -- seed sweep: same spec shape, different seeds; golden bounds hold, and
+#    the availability-starvation quorum defeat reproduces at every seed --
+
+def _check_starved_clique(r):
+    """Trace-driven availability + 3-host clique: replicas concentrate on
+    whoever is online, so both copies of a job often land inside the
+    always-cheating clique — quorum defeated without clique majority. The
+    defense gap is pinned (exact counts are seed-golden, asserted identical
+    across all three engines by the parity harness)."""
+    assert r.server.counts()["jobs_success"] == 40
+    assert r.server.counts()["jobs_failure"] == 0
+    assert r.clique_quorum_wins() == r.metrics.wrong_accepted
+    assert r.wrong_credit() > 0.0
+    assert 2.0 <= r.metrics.replication_overhead <= 3.2
+
+
+for _seed, _wins in ((7, 12), (11, 23)):
+    @scenario(ScenarioSpec(name=f"starved_clique_seed{_seed}", seed=_seed,
+                           trace=TraceReplay(n_timezones=3), clique=Clique(size=3),
+                           horizon=3 * DAY, n_jobs=40))
+    def _check(r, _wins=_wins):
+        _check_starved_clique(r)
+        assert r.metrics.wrong_accepted == _wins
+
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_scenario_matrix(name):
+    spec, check = SCENARIOS[name]
+    result = run_parity(spec)
+    _REPORTS.append(result.report())
+    check(result)
+
+
+# ---------------------------------------------------------------------------
+# §3.4's core claim, end to end (ported): adaptive replication cuts the
+# overhead toward 1 while the accepted-error rate stays bounded.
+# ---------------------------------------------------------------------------
+
+def test_adaptive_vs_plain_replication():
+    base = dict(n_jobs=360, n_hosts=20, horizon=6 * DAY, error_prob=0.005,
+                waves=12)
+    plain = run_parity(ScenarioSpec(name="waves_plain", **base))
+    adaptive = run_parity(ScenarioSpec(name="waves_adaptive", adaptive=True, **base))
+    _REPORTS.append(plain.report())
+    _REPORTS.append(adaptive.report())
+    assert plain.metrics.replication_overhead >= 2.0
+    assert adaptive.metrics.replication_overhead < plain.metrics.replication_overhead
+    assert adaptive.metrics.replication_overhead < 1.9
+    assert adaptive.metrics.error_rate <= 0.02
+    assert adaptive.metrics.correct_accepted >= 330
+
+
+# ---------------------------------------------------------------------------
+# satellite regressions
+# ---------------------------------------------------------------------------
+
+def test_clique_defense_regression():
+    """Pin the quorum-defeat boundary (§3.4). A 3-of-12 always-cheating
+    clique with matching payloads cannot beat min_quorum=2 + adaptive
+    replication: cheaters never validate, so they never become reputable,
+    so their jobs keep getting replicated onto honest hosts. But the
+    defense is structural, not reputational — once the clique covers
+    enough of the *online* fleet (half the hosts here; or a trace-starved
+    fleet, see starved_clique_seed*), both replicas land inside it and
+    matching wrong payloads win.
+
+    TODO-bound: adaptive replication does not detect payload collusion;
+    until an HR-class/work-spreading defense exists, a 6-of-12 clique is
+    pinned at 9 defeated quorums / <=8 credit leaked (seed 2)."""
+    safe = run_spec(ScenarioSpec(name="clique_triple_adaptive_reg", seed=2,
+                                 adaptive=True, clique=Clique(size=3), n_jobs=40))
+    assert safe.metrics.wrong_accepted == 0
+    assert safe.clique_quorum_wins() == 0
+    assert safe.credit_of_hosts(safe.clique_host_ids()) == 0.0
+    # every clique result that reached validation was marked INVALID
+    clique = set(safe.clique_host_ids())
+    judged = [i for i in safe.server.store.instances.values()
+              if i.host_id in clique
+              and i.validate_state in (ValidateState.VALID, ValidateState.INVALID)]
+    assert judged and all(i.validate_state == ValidateState.INVALID for i in judged)
+
+    broken = run_spec(ScenarioSpec(name="clique_half_fleet_reg", seed=2,
+                                   clique=Clique(size=6), n_jobs=40))
+    assert broken.metrics.wrong_accepted == 9  # the vulnerability, pinned
+    assert 0.0 < broken.wrong_credit() <= 8.0
+
+
+def test_sybil_rejoin_regression():
+    """Satellite regression: churn a malicious host, rejoin it under a new
+    host id. The purge paths must not leak the old identity, and the new
+    identity must restart untrusted."""
+    spec = ScenarioSpec(name="sybil_rejoin_reg", seed=4, adaptive=True,
+                        sybil=Sybil(), n_jobs=40, waves=8,
+                        wave_period=6 * HOUR)
+    r = run_spec(spec)
+    old_id = spec.sybil.host_index + 1  # make_population ids are 1-based
+    new_id = sybil_identity_ids(spec)[0]
+    assert new_id == SYBIL_ID_BASE + 1
+    server, sim = r.server, r.sim
+
+    # old identity fully purged server-side (server.remove_host paths)
+    assert old_id not in server.store.hosts
+    assert old_id not in server.estimator._host_versions
+    assert all(server.adaptive.reputation(old_id, v.id) == 0
+               for v in server.store.apps["w"].versions)
+    assert all(h != old_id for h, _ in server.adaptive.consecutive_valid)
+    assert old_id not in sim.specs and old_id not in sim.clients
+
+    # ... but its world slot is tombstoned, never recycled: presenting the
+    # same id again is impossible, which is what forces the Sybil to shed
+    # its reputation along with its identity
+    assert old_id in sim.world.index
+    assert not sim.world.alive[sim.world.index[old_id]]
+
+    # the fresh identity registered, got work, and restarted untrusted
+    assert new_id in sim.specs and new_id in server.store.hosts
+    new_instances = [i for i in server.store.instances.values()
+                     if i.host_id == new_id]
+    assert new_instances
+    assert all(server.adaptive.reputation(new_id, v.id) == 0
+               for v in server.store.apps["w"].versions)
+    # always-cheating under quorum-2: every judged result INVALID, no credit
+    judged = [i for i in new_instances
+              if i.validate_state in (ValidateState.VALID, ValidateState.INVALID)]
+    assert judged and all(i.validate_state == ValidateState.INVALID for i in judged)
+    assert server.credit.total.get(f"host:{new_id}", 0.0) == 0.0
+    assert r.metrics.wrong_accepted == 0
+
+
+# ---------------------------------------------------------------------------
+# generation purity: same (spec, seed) => identical populations, world
+# columns, and event streams (hypothesis property, satellite 3)
+# ---------------------------------------------------------------------------
+
+import numpy as np  # noqa: E402
+
+from repro.core.scenarios import build  # noqa: E402
+
+
+def _spec_from(draw_seed, n_hosts, with_trace, with_clique, with_farm, with_sybil):
+    return ScenarioSpec(
+        name="prop", seed=draw_seed, n_hosts=n_hosts, n_jobs=8,
+        trace=TraceReplay(n_timezones=2) if with_trace else None,
+        clique=Clique(size=min(3, n_hosts - 1)) if with_clique else None,
+        farm=CreditFarm(count=2) if with_farm else None,
+        sybil=Sybil() if with_sybil else None,
+        adaptive=with_sybil,
     )
-    for osn in ("windows", "mac", "linux"):
-        app.add_version(
-            AppVersion(
-                id=next_id("appver"),
-                app_name="w",
-                platform=Platform(osn, "x86_64"),
-                version_num=1,
-                plan_class=default_cpu_plan_class(),
-            )
-        )
-        if gpu:
-            app.add_version(
-                AppVersion(
-                    id=next_id("appver"),
-                    app_name="w",
-                    platform=Platform(osn, "x86_64"),
-                    version_num=1,
-                    plan_class=gpu_plan_class(),
-                )
-            )
-    server.add_app(app)
-    return server
 
 
-def run_scenario(batch_validate, n_jobs=60, n_hosts=12, horizon=2 * DAY,
-                 sim_seed=3, pop_seed=1, adaptive=False, gpu=False,
-                 delay_bound=4 * 3600.0, est_hours=0.2, waves=1,
-                 wave_period=6 * 3600.0, vector_world=True, epoch=0.0,
-                 **pop_kw):
-    reset_ids()
-    server = build_server(batch_validate, adaptive=adaptive, gpu=gpu,
-                          delay_bound=delay_bound)
-    pop = make_population(n_hosts, seed=pop_seed, horizon=horizon, **pop_kw)
-    sim = GridSimulation(server, pop, seed=sim_seed,
-                         vector_world=vector_world, epoch=epoch)
-    per_wave = n_jobs // waves
-
-    def submit(now):
-        for _ in range(per_wave):
-            server.submit_job(
-                Job(id=next_id("job"), app_name="w",
-                    est_flop_count=est_hours * 3600 * 16.5e9),
-                now,
-            )
-
-    if waves == 1:
-        submit(0.0)
-    else:
-        for w in range(waves):
-            sim.schedule_callback(w * wave_period, submit)
-    m = sim.run(horizon)
-    sim.audit_validation()
-    return server, sim, m
+def _pop_fields(pop):
+    out = []
+    for s in pop:
+        d = dict(vars(s))
+        h = d.pop("host")
+        d["host"] = (h.id, h.platforms, h.cpu_vendor, h.cpu_model,
+                     h.os_version, h.on_fraction, h.volunteer_id,
+                     tuple((rt, r.ninstances, r.peak_flops, r.availability)
+                           for rt, r in sorted(h.resources.items(),
+                                               key=lambda kv: kv[0].value)))
+        out.append(d)
+    return out
 
 
-def _instance_states(server):
-    return {
-        i: (x.validate_state, x.granted_credit)
-        for i, x in server.store.instances.items()
-    }
+def _assert_generation_pure(seed, n_hosts, with_trace, with_clique,
+                            with_farm, with_sybil):
+    spec = _spec_from(seed, n_hosts, with_trace, with_clique, with_farm,
+                      with_sybil)
+    # same spec twice: field-identical populations...
+    assert _pop_fields(generate_population(spec)) == _pop_fields(
+        generate_population(spec))
+    # ...and identical constructed worlds: every HostArrays column and the
+    # full pending event stream (heap entries are (t, seq, kind, host))
+    _, sim_a, _ = build(spec)
+    _, sim_b, _ = build(spec)
+    wa, wb = sim_a.world, sim_b.world
+    assert wa.index == wb.index
+    for col in ("ids", "alive", "available", "flops", "cap_ncpu", "ram",
+                "b_hi", "time_slice", "sched_ncpu"):
+        assert np.array_equal(getattr(wa, col), getattr(wb, col)), col
+    assert sorted(sim_a._heap) == sorted(sim_b._heap)
+    # a different seed must actually move the population
+    other = ScenarioSpec(**{**vars(spec), "seed": seed + 1})
+    assert _pop_fields(generate_population(other)) != _pop_fields(
+        generate_population(spec))
 
 
-def assert_engine_oracle_identical(kw):
-    """Every scenario's results must be identical across the engine/oracle
-    axes: batch_validate on/off *and* vector_world on/off (the epoch-batched
-    columnar world loop vs the scalar per-event oracle). Returns the
-    full-engine run for golden-bound assertions."""
-    srv_b, sim_b, m_b = run_scenario(True, **dict(kw))
-    srv_s, sim_s, m_s = run_scenario(False, **dict(kw))
-    assert vars(m_b) == vars(m_s), "engine diverged from scalar oracle"
-    assert srv_b.counts() == srv_s.counts()
-    assert srv_b.credit.total == srv_s.credit.total
-    assert _instance_states(srv_b) == _instance_states(srv_s)
-    # the vectorized world loop must reproduce the scalar event loop
-    # bit-for-bit: SimMetrics, job states, granted credit (ISSUE 5)
-    srv_w, sim_w, m_w = run_scenario(True, vector_world=False, **dict(kw))
-    assert vars(m_b) == vars(m_w), "vector world diverged from scalar loop"
-    assert srv_b.counts() == srv_w.counts()
-    assert srv_b.credit.total == srv_w.credit.total
-    assert _instance_states(srv_b) == _instance_states(srv_w)
-    assert {j: x.state for j, x in srv_b.store.jobs.items()} == {
-        j: x.state for j, x in srv_w.store.jobs.items()
-    }
-    return srv_b, sim_b, m_b
+@pytest.mark.parametrize(
+    "seed,n_hosts,with_trace,with_clique,with_farm,with_sybil",
+    [
+        (0, 4, False, False, False, False),
+        (1, 12, True, False, False, False),
+        (2, 12, False, True, False, False),
+        (3, 12, False, False, True, False),
+        (4, 12, False, False, False, True),
+        (5, 8, True, True, True, False),
+        (6, 14, True, True, True, True),
+        (982451653, 5, True, False, True, True),
+    ],
+)
+def test_generation_purity_corners(seed, n_hosts, with_trace, with_clique,
+                                   with_farm, with_sybil):
+    """Deterministic corner sweep of the purity contract (always runs,
+    even without hypothesis installed)."""
+    _assert_generation_pure(seed, n_hosts, with_trace, with_clique,
+                            with_farm, with_sybil)
 
 
-class TestScenarioMatrix:
-    def test_long_horizon_quiescence(self):
-        """Clean dedicated grid, generous horizon: everything validates,
-        nothing is wrongly accepted, and the plant goes quiescent —
-        overhead settles at the quorum-2 floor and the tail of the horizon
-        is idle."""
-        server, sim, m = assert_engine_oracle_identical(
-            dict(horizon=3 * DAY)
-        )
-        counts = server.counts()
-        assert counts["jobs_success"] == 60
-        assert counts["jobs_failure"] == 0
-        assert m.error_rate == 0.0
-        assert 2.0 <= m.replication_overhead <= 2.3
-        # quiescent tail: instances all resolved, most capacity unused
-        assert counts["instances_in_progress"] == 0
-        assert counts["instances_unsent"] == 0
-        assert m.idle_fraction > 0.5
+def test_generation_pure_in_spec_and_seed():
+    """Property (hypothesis): scenario generation is a pure function of
+    (spec, seed) across the whole layered spec space."""
+    pytest.importorskip("hypothesis")  # optional dep: see requirements-dev.txt
+    from hypothesis import given, settings, strategies as st
 
-    def test_high_churn(self):
-        """Hosts permanently depart mid-run (§4): deadlines fire, retries
-        land on surviving hosts, and the work still completes — at a
-        visible replication-overhead premium."""
-        server, sim, m = assert_engine_oracle_identical(
-            dict(
-                n_hosts=16,
-                churn_rate=1.0 / (1.5 * DAY),
-                horizon=5 * DAY,
-                delay_bound=8 * 3600.0,
-                est_hours=1.5,
-            )
-        )
-        counts = server.counts()
-        assert counts["jobs_success"] >= 56  # work survives departures
-        assert m.error_rate == 0.0
-        assert 2.0 <= m.replication_overhead <= 2.5
-        # churn actually happened and cost something: most hosts gone,
-        # deadline misses retried elsewhere
-        assert len(sim.specs) < 8
-        assert sum(t.metrics.timeouts for t in server.transitioners) > 0
+    @settings(max_examples=25, deadline=None)
+    @given(
+        seed=st.integers(min_value=0, max_value=10**6),
+        n_hosts=st.integers(min_value=4, max_value=14),
+        with_trace=st.booleans(),
+        with_clique=st.booleans(),
+        with_farm=st.booleans(),
+        with_sybil=st.booleans(),
+    )
+    def prop(seed, n_hosts, with_trace, with_clique, with_farm, with_sybil):
+        _assert_generation_pure(seed, n_hosts, with_trace, with_clique,
+                                with_farm, with_sybil)
 
-    def test_malicious_hosts(self):
-        """5% malicious volunteers (§3.4): quorum-2 replication rejects
-        every fabricated result."""
-        server, sim, m = assert_engine_oracle_identical(
-            dict(malicious_fraction=0.05, error_prob=0.01, horizon=3 * DAY)
-        )
-        counts = server.counts()
-        assert m.wrong_accepted == 0
-        assert m.error_rate == 0.0
-        assert counts["jobs_success"] >= 55
-        # corruption forced extra (tie-breaker) instances beyond the quorum
-        assert m.replication_overhead > 2.0
+    prop()
 
-    def test_heterogeneous_cpu_gpu_mix(self):
-        """Half the fleet carries a GPU ~60x the CPU speed (§3.1 plan
-        classes): the mixed fleet validates cross-device via the fuzzy
-        comparator and finishes much faster than CPU-only."""
-        server, sim, m = assert_engine_oracle_identical(
-            dict(gpu=True, gpu_fraction=0.5, horizon=2 * DAY, n_jobs=80,
-                 est_hours=0.4)
-        )
-        counts = server.counts()
-        assert counts["jobs_success"] == 80
-        assert m.error_rate == 0.0
-        # GPU instances actually dispatched: some PFC came from GPU hosts
-        gpu_versions = {
-            v.id
-            for v in server.store.apps["w"].versions
-            if v.plan_class.name.startswith("gpu")
-        }
-        assert any(
-            i.app_version_id in gpu_versions
-            for i in server.store.instances.values()
-        )
 
-    def test_adaptive_vs_plain_replication(self):
-        """§3.4's core claim, end to end: adaptive replication cuts the
-        overhead toward 1 while the accepted-error rate stays bounded."""
-        kw = dict(n_jobs=360, n_hosts=20, horizon=6 * DAY, error_prob=0.005,
-                  waves=12)
-        _, _, plain = assert_engine_oracle_identical(dict(kw))
-        _, _, adaptive = assert_engine_oracle_identical(dict(kw, adaptive=True))
-        assert plain.replication_overhead >= 2.0
-        assert adaptive.replication_overhead < plain.replication_overhead
-        assert adaptive.replication_overhead < 1.9
-        assert adaptive.error_rate <= 0.02
-        assert adaptive.correct_accepted >= 330
+# ---------------------------------------------------------------------------
+# full-scale adversarial run (CI: behind the slow marker)
+# ---------------------------------------------------------------------------
 
-    def test_low_availability(self):
-        """Hosts compute only ~60% of the time (§1.1): throughput drops
-        but correctness and eventual completion hold, and the measured
-        idle fraction reflects the unavailability."""
-        server, sim, m = assert_engine_oracle_identical(
-            dict(availability=0.6, horizon=4 * DAY)
-        )
-        counts = server.counts()
-        assert counts["jobs_success"] >= 55
-        assert m.error_rate == 0.0
-        assert m.idle_fraction >= 0.35
-
-    def test_error_prone_fleet(self):
-        """Flaky hardware corrupting 5% of results: replication filters
-        every corruption; the overhead premium pays for it."""
-        server, sim, m = assert_engine_oracle_identical(
-            dict(error_prob=0.05, horizon=3 * DAY)
-        )
-        assert m.wrong_accepted == 0
-        assert server.counts()["jobs_success"] >= 55
-        assert m.replication_overhead > 2.0
-        # invalid results actually flowed through the validator
-        from repro.core import ValidateState
-
-        assert any(
-            i.validate_state == ValidateState.INVALID
-            for i in server.store.instances.values()
-        )
+@pytest.mark.slow
+def test_adversarial_10k_hosts():
+    """10k-host fleet with a 500-host clique, 200 farmers, churn, and an
+    epoch-batched vectorized world: the engines hold at population scale.
+    Engine-only (the 3-axis parity contract is already pinned per-scenario
+    above; a scalar-oracle run at 10k hosts is minutes, not seconds)."""
+    spec = ScenarioSpec(
+        name="adversarial_10k", seed=12, n_hosts=10_000, n_jobs=3000,
+        horizon=0.5 * DAY, est_hours=0.05, clique=Clique(size=500),
+        farm=CreditFarm(count=200, factor=8.0), churn_rate=1.0 / (30 * DAY),
+        availability=0.9,
+    )
+    r = run_spec(spec, epoch=60.0)
+    _REPORTS.append(r.report())
+    counts = r.server.counts()
+    assert counts["jobs_success"] >= 2900
+    assert r.metrics.error_rate <= 0.01  # 5% clique: quorum holds at scale
+    assert r.clique_quorum_wins() == r.metrics.wrong_accepted
+    assert 2.0 <= r.metrics.replication_overhead <= 2.6
