@@ -15,6 +15,14 @@ Two claims:
     These are the acceptance bits CI asserts (and the same quantities the
     scenario test matrix golden-pins; the benchmark tracks them as a
     trajectory across PRs).
+  * **the defense layer is containment without a tax** (§3.4 defense in
+    depth): a 6-of-12 clique that defeats 9 quorums undefended contains
+    to 1 with DefensePolicy ON, and on an all-honest fleet the full
+    stack (suspicion clusters + HR census + quota table) costs <= 10%
+    dispatch wall time vs defense-off (rows ``scen_defense/*``). In
+    practice the quota cap *reduces* scheduler work — hosts stop
+    buffering a day of speculative instances — so the measured ratio
+    sits well under 1.0; the 1.10 floor guards the regression direction.
 
 Smoke mode (CI): ``--smoke`` / ``BENCH_SCENARIOS_SMOKE=1`` trims the
 generation population and asserts the acceptance record. Results go to
@@ -30,6 +38,7 @@ from .common import RESULTS, emit, timer, write_bench_json
 from repro.core import (
     Clique,
     CreditFarm,
+    DefensePolicy,
     Outage,
     ScenarioSpec,
     TraceReplay,
@@ -103,15 +112,63 @@ def run() -> None:
         f"8x farmer earns {per_farmer:.3f}/host vs honest {honest:.3f}/host",
     )
 
+    # -- defense-in-depth: containment + dispatch-overhead floor --
+    half = dict(name="bench_half_clique", seed=2, clique=Clique(size=6),
+                n_jobs=40)
+    undefended = run_spec(ScenarioSpec(**half))
+    defended = run_spec(ScenarioSpec(**{**half, "defense": DefensePolicy()}))
+    def_wrong, undef_wrong = (defended.metrics.wrong_accepted,
+                              undefended.metrics.wrong_accepted)
+    emit(
+        "scen_defense/contained_wrong_accepted",
+        float(def_wrong),
+        f"6-of-12 clique: {undef_wrong} defeated quorums undefended -> "
+        f"{def_wrong} with DefensePolicy",
+    )
+
+    # honest large fleet, epoch-batched world: wall-time ratio ON/OFF
+    # (min of 2 reps per side to shave scheduler/GC noise)
+    ovh_hosts, ovh_jobs = (1000, 300) if smoke else (10_000, 3000)
+
+    def _timed(defense):
+        best = float("inf")
+        for _ in range(2):
+            spec = ScenarioSpec(
+                name="bench_defense_ovh", seed=12, n_hosts=ovh_hosts,
+                n_jobs=ovh_jobs, horizon=0.5 * DAY, est_hours=0.05,
+                availability=0.9, defense=defense,
+            )
+            t0 = timer()
+            r = run_spec(spec, epoch=60.0)
+            best = min(best, timer() - t0)
+            assert r.server.counts()["jobs_success"] == ovh_jobs
+        return best
+
+    t_off = _timed(None)
+    t_on = _timed(DefensePolicy())
+    ovh_ratio = t_on / t_off
+    emit(
+        f"scen_defense/dispatch_overhead_{ovh_hosts}",
+        ovh_ratio,
+        f"honest fleet {ovh_hosts} hosts: defense-on {t_on:.2f}s vs "
+        f"off {t_off:.2f}s",
+    )
+
     acceptance = {
         "clique_wrong_accepted": clique_wrong,
         "clique_credit": clique_credit,
         "farm_advantage": per_farmer / honest if honest else 0.0,
+        "defense_wrong_accepted": def_wrong,
+        "undefended_wrong_accepted": undef_wrong,
+        "defense_overhead_ratio": ovh_ratio,
         "pass": bool(
             clique_wrong == 0
             and clique_credit == 0.0
             and honest > 0.0
             and per_farmer <= 1.5 * honest
+            and def_wrong <= 1
+            and def_wrong < undef_wrong
+            and ovh_ratio <= 1.10
         ),
     }
     run.acceptance = acceptance  # picked up by benchmarks.run and CI

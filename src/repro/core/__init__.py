@@ -12,6 +12,7 @@ Layout (paper section in parens):
   estimation   — runtime estimation / proj_flops (§6.3)
   credit       — PFC credit + normalizations + cross-project (§7)
   allocation   — linear-bounded allocation model (§3.9)
+  defense      — work-spreading / HR census / host punishment (§3.4)
   scheduler    — feeder, job cache, dispatch policy (§5.1, §6.4)
   batch_dispatch — vectorized slots×hosts batch scoring engine (§5.1, §6.4)
   client       — WRR/EDF resource scheduling + work fetch (§6.1–6.2)
@@ -29,6 +30,7 @@ from .batch_validate import BatchValidationEngine
 from .client import Client, ClientJob, ClientPrefs, ClientResource, ProjectAttachment
 from .coordinator import AMReply, Coordinator, VettedProject
 from .credit import CreditSystem, peak_flop_count
+from .defense import DefenseLayer, DefensePolicy
 from .estimation import RuntimeEstimator
 from .fsm import Transitioner
 from .keywords import KeywordPrefs, keyword_score
@@ -106,6 +108,8 @@ __all__ = [
     "Coordinator",
     "CreditFarm",
     "CreditSystem",
+    "DefenseLayer",
+    "DefensePolicy",
     "ExponentialBackoff",
     "Feeder",
     "GridSimulation",

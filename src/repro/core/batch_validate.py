@@ -136,6 +136,10 @@ class ValidationPlan:
         self.err_outcome: List[JobInstance] = []
         self.credit_entries: List[Tuple[Job, List[JobInstance], List[int]]] = []
         self.peers_cache: Dict[str, List[int]] = {}
+        # defense layer (§3.4): one ((host, ver) valid pairs, invalid pairs)
+        # entry per finalized decision, replayed sequentially in finalize —
+        # the quota fold is order-sensitive, so replay order == scalar order
+        self.defense_events: List[Tuple[List[Tuple[int, int]], List[Tuple[int, int]]]] = []
 
     # -- per-job views ---------------------------------------------------
 
@@ -213,11 +217,20 @@ class BatchValidationEngine:
         now: float,
         instance: int = 0,
         n_instances: int = 1,
+        clusters: Optional[Dict[int, int]] = None,
     ) -> ValidationPlan:
         """The fused pre-pass over one tick's flagged jobs: gather, count,
         digest, group, decide. Pure — no store mutation happens here; the
         transitioner applies decisions job-by-job in its usual order so
         failure-limit checks and metrics keep exact scalar semantics.
+
+        ``clusters`` is the defense layer's tick-start suspicion-cluster
+        snapshot: a candidate whose successes include two hosts of one
+        cluster is routed to the scalar ``check_set`` fallback, which
+        applies the effective-quorum-size rule (same-cluster replicas are
+        one vote). Everything else takes the fused digest path, whose
+        group counts equal effective counts when no two members share a
+        cluster.
         """
         store = self.store
         plan = ValidationPlan(self, jobs)
@@ -280,6 +293,25 @@ class BatchValidationEngine:
         has_fresh = in_vp & (n_fresh > 0)
         candidates = ~has_canon & has_fresh & (n_succ >= quorum)
         stragglers = has_canon & has_fresh
+
+        # -- defense work-spreading veto (§3.4): scalar-route candidates
+        #    with a same-cluster success pair so effective-quorum counting
+        #    applies (straggler validation has no quorum logic — fused) ----
+        if clusters:
+            for p in np.flatnonzero(candidates & (n_succ >= 2)).tolist():
+                seen: set = set()
+                for s in plan.successes(p):
+                    cl = (
+                        clusters.get(s.host_id)
+                        if s.host_id is not None
+                        else None
+                    )
+                    if cl is not None:
+                        if cl in seen:
+                            plan.decisions[p] = _SCALAR_DECISION
+                            candidates[p] = False
+                            break
+                        seen.add(cl)
 
         # -- digest pass ---------------------------------------------------
         need_digest = (candidates & (n_succ >= 2)) | stragglers

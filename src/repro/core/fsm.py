@@ -35,6 +35,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from .adaptive import AdaptiveReplication
 from .credit import CreditSystem
+from .defense import DefenseLayer
 from .store import JobStore
 from .types import (
     App,
@@ -71,8 +72,18 @@ class Transitioner:
     instance: int = 0
     n_instances: int = 1
     batch_validate: bool = True
+    # defense layer (§3.4): validation outcomes feed its agreement stats +
+    # per-(host, version) quota table. Scalar path calls it inline; batch
+    # path defers the identical (valid, invalid) pair lists through
+    # ``ValidationPlan.defense_events`` and replays them in finalize order.
+    defense: Optional[DefenseLayer] = None
     metrics: TransitionerMetrics = field(default_factory=TransitionerMetrics)
     _engine: object = field(default=None, repr=False)
+    # tick-start snapshot of the defense suspicion clusters (host -> cluster
+    # id). Quorum decisions consult the snapshot — not live cluster state —
+    # so the scalar loop (which feeds the defense layer mid-tick) and the
+    # batch engine (which defers the feed to finalize) decide identically.
+    _sus_clusters: Dict[int, int] = field(default_factory=dict, repr=False)
 
     # ------------------------------------------------------------------
 
@@ -88,6 +99,9 @@ class Transitioner:
 
         Returns the number of jobs transitioned.
         """
+        self._sus_clusters = (
+            self.defense.clusters() if self.defense is not None else {}
+        )
         self._check_deadlines(now)
         pending = self.store.pending_transitions(self.instance, self.n_instances)
         plan = None
@@ -97,7 +111,8 @@ class Transitioner:
 
                 self._engine = BatchValidationEngine(self.store)
             plan = self._engine.prepare(
-                pending, now, self.instance, self.n_instances
+                pending, now, self.instance, self.n_instances,
+                clusters=self._sus_clusters,
             )
         n = 0
         if plan is not None:
@@ -154,6 +169,13 @@ class Transitioner:
                                 adp_v.append(i.app_version_id)
                                 adp_ok.append(False)
                             err_out.append(i)
+                    if self.defense is not None:
+                        plan.defense_events.append((
+                            [(i.host_id, i.app_version_id) for i in valid
+                             if i.host_id is not None and i.app_version_id is not None],
+                            [(i.host_id, i.app_version_id) for i in invalid
+                             if i.host_id is not None and i.app_version_id is not None],
+                        ))
                     if credit is not None and valid:
                         peers = peers_cache.get(job.app_name)
                         if peers is None:
@@ -170,6 +192,12 @@ class Transitioner:
                 job.transition_flag = False
                 self._transition(job, now)
                 n += 1
+        if self.defense is not None:
+            # enforcement sweep: abort clustered in-flight co-placements and
+            # unpin HR-stuck retries. After the finalize / scalar loop above
+            # both validation engines hold identical store state, so the
+            # sweep's decisions are engine-identical.
+            self.defense.tick_sweep(now, self.instance, self.n_instances)
         return n
 
     # ------------------------------------------------------------------
@@ -191,6 +219,9 @@ class Transitioner:
             if self.adaptive is not None and inst.host_id is not None \
                     and inst.app_version_id is not None:
                 self.adaptive.on_invalid(inst.host_id, inst.app_version_id)
+            if self.defense is not None and inst.host_id is not None \
+                    and inst.app_version_id is not None:
+                self.defense.on_error(inst.host_id, inst.app_version_id, now)
 
     # ------------------------------------------------------------------
 
@@ -266,7 +297,13 @@ class Transitioner:
             # successes: "if the outputs agree, they are accepted ...
             # otherwise a third instance is created and run" (§3.4). Two
             # disagreeing successes contribute 1, forcing a tie-breaker.
-            if plan is not None:
+            clusters = self._sus_clusters
+            if clusters and self._has_cluster_pair(successes, clusters):
+                # same-cluster successes count as one vote (work-spreading):
+                # force the scalar group scan so the top-up sees the reduced
+                # effective agreement and issues the tie-breaking replica
+                agree = self._largest_agreeing_group(app, successes, clusters)
+            elif plan is not None:
                 agree = plan.largest_agreeing_group(pos, app, successes)
             else:
                 agree = self._largest_agreeing_group(app, successes)
@@ -305,8 +342,26 @@ class Transitioner:
         return job.min_quorum
 
     @staticmethod
-    def _largest_agreeing_group(app: App, successes: List[JobInstance]) -> int:
-        from .validator import bitwise_equal
+    def _has_cluster_pair(
+        successes: List[JobInstance], clusters: Dict[int, int]
+    ) -> bool:
+        """Do two successes come from hosts of the same suspicion cluster?"""
+        seen: set = set()
+        for s in successes:
+            cl = clusters.get(s.host_id) if s.host_id is not None else None
+            if cl is not None:
+                if cl in seen:
+                    return True
+                seen.add(cl)
+        return False
+
+    @staticmethod
+    def _largest_agreeing_group(
+        app: App,
+        successes: List[JobInstance],
+        clusters: Optional[Dict[int, int]] = None,
+    ) -> int:
+        from .validator import bitwise_equal, effective_quorum_size
 
         viable = [s for s in successes if s.validate_state != ValidateState.INVALID]
         if len(viable) <= 1:
@@ -320,13 +375,18 @@ class Transitioner:
                     break
             else:
                 groups.append([inst])
+        if clusters:
+            return max(effective_quorum_size(g, clusters) for g in groups)
         return max(len(g) for g in groups)
 
     # ------------------------------------------------------------------
 
     def _validate(self, job: Job, app: App, successes: List[JobInstance],
                   now: float, plan=None) -> None:
-        result = check_set(successes, app.comparator, self._required_quorum(job))
+        result = check_set(
+            successes, app.comparator, self._required_quorum(job),
+            clusters=self._sus_clusters,
+        )
         if result.canonical is None:
             return  # inconclusive; transitioner will top up instances
         job.canonical_instance_id = result.canonical.id
@@ -417,6 +477,18 @@ class Transitioner:
                     self.adaptive.on_invalid(i.host_id, i.app_version_id)
                 i.outcome = InstanceOutcome.VALIDATE_ERROR
 
+        # defense layer (§3.4): one finalized decision's outcome pairs feed
+        # the agreement stats + quota table (valids unconditionally — the
+        # by_replication gate is adaptive-reputation-specific)
+        if self.defense is not None:
+            self.defense.on_validation(
+                [(i.host_id, i.app_version_id) for i in valid
+                 if i.host_id is not None and i.app_version_id is not None],
+                [(i.host_id, i.app_version_id) for i in invalid
+                 if i.host_id is not None and i.app_version_id is not None],
+                now,
+            )
+
         # credit (§7): grant the outlier-robust average to all valid instances
         if self.credit is not None and valid:
             peer_vids = [v.id for v in self.store.apps[job.app_name].latest_versions()]
@@ -457,6 +529,13 @@ class Transitioner:
                     adp_v.append(i.app_version_id)
                     adp_ok.append(False)
                 plan.err_outcome.append(i)
+        if self.defense is not None:
+            plan.defense_events.append((
+                [(i.host_id, i.app_version_id) for i in valid
+                 if i.host_id is not None and i.app_version_id is not None],
+                [(i.host_id, i.app_version_id) for i in invalid
+                 if i.host_id is not None and i.app_version_id is not None],
+            ))
         if self.credit is not None and valid:
             peers = plan.peers_cache.get(job.app_name)
             if peers is None:
@@ -489,6 +568,12 @@ class Transitioner:
                 i.outcome = InstanceOutcome.VALIDATE_ERROR
             if plan.adp_h:
                 self.adaptive.apply_events(plan.adp_h, plan.adp_v, plan.adp_ok)
+        if self.defense is not None:
+            # sequential replay of the tick's decisions in scalar order:
+            # the quota halve/increment fold is order-sensitive, so this is
+            # bit-equal to the inline scalar calls by construction
+            for vpairs, ipairs in plan.defense_events:
+                self.defense.on_validation(vpairs, ipairs, now)
         if self.credit is not None and plan.credit_entries:
             entries = plan.credit_entries
             grants = self.credit.ingest_batch(entries)

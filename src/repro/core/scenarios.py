@@ -43,11 +43,13 @@ from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from ..data import traces
+from .defense import DefensePolicy
 from .server import ProjectServer
 from .simulator import GridSimulation, HostSpec, SimMetrics, make_population
 from .types import (
     App,
     AppVersion,
+    HRLevel,
     Job,
     Platform,
     ProcessingResource,
@@ -161,6 +163,11 @@ class ScenarioSpec:
     # error_prob assigned to the least-available quartile of the fleet
     # (failures correlated with poor availability), 0 disables
     correlated_failures: float = 0.0
+    # defense-in-depth replica placement (§3.4): work-spreading suspicion
+    # clusters, HR-class census pinning, per-(host, version) daily quota +
+    # punishment backoff. None (the default) keeps every pre-existing
+    # golden byte-identical.
+    defense: Optional[DefensePolicy] = None
 
 
 # ---------------------------------------------------------------------------
@@ -326,7 +333,10 @@ def _install_sybil(spec: ScenarioSpec, sim: GridSimulation, attacker: HostSpec) 
 
 def build_server(spec: ScenarioSpec, batch_validate: bool) -> ProjectServer:
     server = ProjectServer(
-        name="p", purge_delay=1e18, batch_validate=batch_validate
+        name="p",
+        purge_delay=1e18,
+        batch_validate=batch_validate,
+        defense_policy=spec.defense,
     )
     app = App(
         name="w",
@@ -335,6 +345,7 @@ def build_server(spec: ScenarioSpec, batch_validate: bool) -> ProjectServer:
         delay_bound=spec.delay_bound,
         adaptive_replication=spec.adaptive,
         comparator=fuzzy_comparator(rtol=1e-6, atol=1e-9),
+        hr_level=spec.defense.hr_level if spec.defense is not None else HRLevel.NONE,
     )
     for osn in ("windows", "mac", "linux"):
         app.add_version(
@@ -522,6 +533,28 @@ class ScenarioResult:
             extras["sybil_ids"] = sybil_identity_ids(self.spec)
         if extras:
             out["adversarial"] = extras
+        defense = self.server.defense
+        if defense is not None:
+            d: Dict[str, object] = dict(defense.counters())
+            clique = self.clique_host_ids()
+            if clique:
+                # why the clique was contained, per mechanism: dispatches it
+                # was denied by quota/backoff/spread, and whether its hosts
+                # ended up inside suspicion clusters
+                clusters = defense.clusters()
+                d["clique_hosts_clustered"] = sorted(
+                    h for h in clique if h in clusters
+                )
+                d["clique_quota_denials"] = sum(
+                    defense.denied_quota_by.get(h, 0) for h in clique
+                )
+                d["clique_deferrals"] = sum(
+                    defense.deferred_by.get(h, 0) for h in clique
+                )
+                d["clique_spread_denials"] = sum(
+                    defense.denied_spread_by.get(h, 0) for h in clique
+                )
+            out["defense"] = d
         return out
 
 
@@ -544,21 +577,46 @@ def _instance_states(server: ProjectServer) -> Dict[int, Tuple[object, float]]:
     }
 
 
+def _first_divergence(a: Dict, b: Dict) -> Optional[str]:
+    """First differing key (sorted) between two flat dicts, described."""
+    for k in sorted(set(a) | set(b), key=str):
+        if k not in a:
+            return f"{k!r} only in B (B={b[k]!r})"
+        if k not in b:
+            return f"{k!r} only in A (A={a[k]!r})"
+        if a[k] != b[k]:
+            return f"{k!r}: A={a[k]!r} B={b[k]!r}"
+    return None
+
+
 def assert_results_identical(
     a: ScenarioResult, b: ScenarioResult, what: str, job_states: bool = False
 ) -> None:
-    assert vars(a.metrics) == vars(b.metrics), f"{a.spec.name}: {what} metrics diverged"
-    assert a.server.counts() == b.server.counts(), f"{a.spec.name}: {what} counts diverged"
-    assert a.server.credit.total == b.server.credit.total, (
-        f"{a.spec.name}: {what} credit diverged"
-    )
-    assert _instance_states(a.server) == _instance_states(b.server), (
-        f"{a.spec.name}: {what} instance states diverged"
-    )
+    """3-axis parity contract. ``what`` names the engine axis under test
+    (A = full engines, B = the oracle for that axis); on divergence the
+    failure message pinpoints the first differing field/key/instance so
+    the break is localizable without re-running the matrix."""
+
+    def fail(section: str, detail: str) -> str:
+        return (
+            f"[parity] scenario {a.spec.name!r}, axis '{what}': "
+            f"{section} diverged first at {detail}"
+        )
+
+    d = _first_divergence(vars(a.metrics), vars(b.metrics))
+    assert d is None, fail("SimMetrics", d)
+    d = _first_divergence(a.server.counts(), b.server.counts())
+    assert d is None, fail("server counts", d)
+    d = _first_divergence(a.server.credit.total, b.server.credit.total)
+    assert d is None, fail("credit totals", d)
+    d = _first_divergence(_instance_states(a.server), _instance_states(b.server))
+    assert d is None, fail("instance (validate_state, granted_credit)", d)
     if job_states:
-        assert {j: x.state for j, x in a.server.store.jobs.items()} == {
-            j: x.state for j, x in b.server.store.jobs.items()
-        }, f"{a.spec.name}: {what} job states diverged"
+        d = _first_divergence(
+            {j: x.state for j, x in a.server.store.jobs.items()},
+            {j: x.state for j, x in b.server.store.jobs.items()},
+        )
+        assert d is None, fail("job states", d)
 
 
 def run_parity(spec: ScenarioSpec, epoch: float = 0.0) -> ScenarioResult:

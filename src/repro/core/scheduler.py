@@ -31,6 +31,7 @@ import numpy as np
 
 from .adaptive import AdaptiveReplication
 from .allocation import LinearBoundedAllocator
+from .defense import DefenseLayer
 from .estimation import RuntimeEstimator
 from .keywords import KeywordPrefs, keyword_score
 from .store import JobStore
@@ -283,6 +284,10 @@ class Scheduler:
     # scalar scan (tests/test_batch_dispatch.py); False keeps the scalar
     # O(slots²) reference path as the oracle.
     vector_dispatch: bool = False
+    # defense layer (§3.4 work-spreading / HR census / host punishment);
+    # enforced in the shared slow-check + dispatch choke points, so the
+    # scalar and vectorized tails stay result-identical
+    defense: Optional["DefenseLayer"] = None
     metrics: SchedulerMetrics = field(default_factory=SchedulerMetrics)
     _rng: random.Random = field(default=None, repr=False)  # type: ignore[assignment]
 
@@ -400,6 +405,9 @@ class Scheduler:
                 if self.adaptive is not None and c.outcome != InstanceOutcome.SUCCESS \
                         and inst.app_version_id is not None:
                     self.adaptive.on_invalid(host.id, inst.app_version_id)
+                if self.defense is not None and c.outcome != InstanceOutcome.SUCCESS \
+                        and inst.app_version_id is not None:
+                    self.defense.on_error(host.id, inst.app_version_id, now)
                 # debit the submitter's allocation balance (§3.9)
                 if self.allocator is not None and c.runtime > 0:
                     self.allocator.debit(job.submitter, c.runtime, now)
@@ -469,7 +477,7 @@ class Scheduler:
 
             slot.taken = True
             # slow check (§6.4): DB-level conditions
-            if not self._slow_check(job, host):
+            if not self._slow_check(job, host, version, now):
                 slot.taken = False
                 self.metrics.slow_check_rejects += 1
                 slot.skipped += 1
@@ -572,9 +580,10 @@ class Scheduler:
                 k += 1
                 continue
 
+            choice = choices[int(gidx[k])]
             slot.taken = True
             # slow check (§6.4): DB-level conditions
-            if not self._slow_check(job, host):
+            if not self._slow_check(job, host, choice.version, now):
                 slot.taken = False
                 metrics.slow_check_rejects += 1
                 slot.skipped += 1
@@ -583,7 +592,6 @@ class Scheduler:
                 continue
 
             scaled_rt = scaled[k]
-            choice = choices[int(gidx[k])]
             self._dispatch(job, inst, host, choice.version, now, reply, float(est[k]))
             sending_jobs.add(job.id)
             self.feeder.clear_slot(inst.id)
@@ -710,11 +718,21 @@ class Scheduler:
 
     # ------------------------------------------------------------------
 
-    def _slow_check(self, job: Job, host: Host) -> bool:
+    def _slow_check(
+        self,
+        job: Job,
+        host: Host,
+        version: Optional[AppVersion] = None,
+        now: float = 0.0,
+    ) -> bool:
         if job.state.value != "active":
             return False  # errored out since we considered it
         if self.store.host_has_instance_of_job(host.id, job.id):
             return False  # one instance per volunteer (§6.4)
+        if self.defense is not None and version is not None:
+            # defense layer (§3.4): punishment deferral, daily quota,
+            # work-spreading suspicion clusters
+            return self.defense.check_dispatch(job, host, version, now)
         return True
 
     # ------------------------------------------------------------------
@@ -735,9 +753,14 @@ class Scheduler:
         inst.app_version_id = version.id
         inst.sent_time = now
         inst.deadline = now + job.delay_bound
-        # lock HR class / app version on first dispatch (§3.4)
+        # lock HR class / app version on first dispatch (§3.4). With the
+        # defense layer active, the census guard skips the pin when the
+        # class holds too few hosts to reach quorum (logged, not fatal) —
+        # the batch engine folds the lock from job.hr_class afterwards, so
+        # the guard propagates to the fused HR mask automatically.
         if app.hr_level != HRLevel.NONE and job.hr_class is None:
-            job.hr_class = hr_class(host, app.hr_level)
+            if self.defense is None or self.defense.can_pin(host, app, job):
+                job.hr_class = hr_class(host, app.hr_level)
         if app.homogeneous_app_version and job.hav_version_id is None:
             job.hav_version_id = version.id
         # adaptive replication decision (§3.4): replicate this host's job?
@@ -747,6 +770,8 @@ class Scheduler:
                 job.init_ninstances = max(job.init_ninstances, app.min_quorum)
                 job.transition_flag = True  # transitioner creates the replica
         self.metrics.dispatched += 1
+        if self.defense is not None:
+            self.defense.on_dispatch(job, app, host, version, now)
         reply.jobs.append(
             DispatchedJob(
                 job=job,

@@ -17,6 +17,7 @@ from typing import Any, Callable, Dict, List, Optional
 from .adaptive import AdaptiveReplication
 from .allocation import LinearBoundedAllocator
 from .credit import CreditSystem
+from .defense import DefenseLayer, DefensePolicy
 from .estimation import RuntimeEstimator
 from .fsm import Transitioner
 from .scheduler import Feeder, Scheduler, ScheduleReply, ScheduleRequest, TrickleUp
@@ -59,6 +60,10 @@ class ProjectServer:
     # GridSimulation(vector_world=True) flips this on via
     # :meth:`set_vector_dispatch`.
     vector_dispatch: bool = False
+    # defense-in-depth replica placement (§3.4): work-spreading, HR census
+    # pinning, host punishment. None disables the layer entirely.
+    defense_policy: Optional[DefensePolicy] = None
+    defense: Optional[DefenseLayer] = None
     purge_delay: float = 0.0  # keep completed rows briefly (§4)
     enabled: DaemonControl = field(default_factory=DaemonControl)
     assimilators: Dict[str, AssimilatorFn] = field(default_factory=dict)
@@ -72,6 +77,13 @@ class ProjectServer:
 
     def __post_init__(self) -> None:
         self.feeder = Feeder(store=self.store, cache_size=self.cache_size)
+        if self.defense is None and self.defense_policy is not None:
+            self.defense = DefenseLayer(policy=self.defense_policy, store=self.store)
+        if self.defense is not None:
+            # HR relax unpins mutate job.hr_class behind the persistent
+            # dispatch snapshot's back; bump the cache generation so the
+            # vectorized path re-reads the pins (scalar-parity requirement)
+            self.defense.invalidate_dispatch = self.feeder.invalidate
         self.schedulers = [
             Scheduler(
                 store=self.store,
@@ -81,6 +93,7 @@ class ProjectServer:
                 adaptive=self.adaptive,
                 seed=i,
                 vector_dispatch=self.vector_dispatch,
+                defense=self.defense,
             )
             for i in range(self.n_scheduler_instances)
         ]
@@ -92,6 +105,7 @@ class ProjectServer:
                 instance=i,
                 n_instances=self.n_daemon_instances,
                 batch_validate=self.batch_validate,
+                defense=self.defense,
             )
             for i in range(self.n_daemon_instances)
         ]
@@ -104,6 +118,8 @@ class ProjectServer:
         return self.store.add_app(app)
 
     def add_host(self, host: Host) -> Host:
+        if self.defense is not None:
+            self.defense.on_host_added(host)
         return self.store.add_host(host)
 
     def submit_job(self, job: Job, now: float = 0.0) -> Job:
@@ -267,6 +283,8 @@ class ProjectServer:
         self.store.remove_host(host_id)
         self.estimator.forget_host(host_id)
         self.adaptive.forget_host(host_id)
+        if self.defense is not None:
+            self.defense.forget_host(host_id)
 
     def set_vector_dispatch(self, flag: bool) -> None:
         """Flip the persistent-snapshot dispatch path on every scheduler

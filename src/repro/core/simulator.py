@@ -349,7 +349,13 @@ class GridSimulation:
         self.clients[host.id] = client
         self.running[host.id] = {}
         cpu = host.resources.get(ResourceType.CPU)
-        self.world.add_host(host.id, client, cpu.ninstances if cpu else 0.0)
+        defense = self.server.defense
+        self.world.add_host(
+            host.id,
+            client,
+            cpu.ninstances if cpu else 0.0,
+            hr_id=defense.hr_id_of(host) if defense is not None else -1,
+        )
         self._push(now + self.rng.uniform(0.0, spec.rpc_poll), _RPC, host.id)
         if spec.avail_schedule is not None:
             # trace replay: availability toggles come from the schedule,
@@ -1032,6 +1038,15 @@ class GridSimulation:
         # ... and the world's column <-> object consistency check (the
         # scalar loop keeps object accrual in lockstep with the columns)
         self.world.check_invariants(strict_dynamic=not self.vector_world)
+        # persist the defense layer's final suspicion clusters into the
+        # world column (deterministic: cluster ids are smallest-member ids)
+        defense = self.server.defense
+        if defense is not None:
+            clusters = defense.clusters()
+            world = self.world
+            for host_id, slot in world.index.items():
+                if world.alive[slot]:
+                    world.suspect_cluster[slot] = clusters.get(host_id, -1)
         self._audit_validate_states()
 
     def _audit_validate_states(self) -> None:

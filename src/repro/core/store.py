@@ -241,6 +241,48 @@ class JobStore:
                 return True
         return False
 
+    def hosts_with_instance(self, job_id: int) -> Set[int]:
+        """Host ids ever assigned an instance of ``job_id`` (work-spreading
+        constraint, §3.4). Index path reads the maintained assignment set;
+        the oracle path rebuilds it by scanning the job's instances — the
+        two agree because instances persist until the job row is purged and
+        the purge pops the set."""
+        if self.use_indexes:
+            return self._job_hosts.get(job_id, set())
+        return {i.host_id for i in self.job_instances(job_id) if i.host_id is not None}
+
+    def in_progress_instances(self) -> List[JobInstance]:
+        """IN_PROGRESS instances in ascending id order (defense spread
+        sweep). Index path reads the state index; oracle path scans."""
+        if self.use_indexes:
+            insts = self.instances
+            return [
+                insts[iid]
+                for iid in sorted(self._insts_by_state[InstanceState.IN_PROGRESS])
+                if iid in insts
+            ]
+        return sorted(
+            (i for i in self.instances.values()
+             if i.state == InstanceState.IN_PROGRESS),
+            key=lambda i: i.id,
+        )
+
+    def unsent_job_ids(self) -> Set[int]:
+        """Job ids with at least one UNSENT instance (defense HR-relax
+        sweep). Index path reads the state index; oracle path scans."""
+        if self.use_indexes:
+            insts = self.instances
+            return {
+                insts[iid].job_id
+                for iid in self._insts_by_state[InstanceState.UNSENT]
+                if iid in insts
+            }
+        return {
+            i.job_id
+            for i in self.instances.values()
+            if i.state == InstanceState.UNSENT
+        }
+
     # ---- batch bookkeeping (§3.9) ----
 
     def batch_done(self, batch_id: int) -> bool:

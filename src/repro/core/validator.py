@@ -17,7 +17,7 @@ import itertools
 import struct
 from dataclasses import dataclass
 from hashlib import blake2b
-from typing import Any, Callable, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -430,10 +430,30 @@ class ValidationResult:
     inconclusive: List[JobInstance]
 
 
+def effective_quorum_size(
+    group: Sequence[JobInstance], clusters: Dict[int, int]
+) -> int:
+    """Quorum votes of a group under work-spreading (§3.4 defense layer):
+    replicas from hosts of one suspicion cluster collectively count as a
+    single vote, so colluders can never validate each other by themselves.
+    Unclustered hosts count individually."""
+    seen: set = set()
+    n = 0
+    for i in group:
+        cl = clusters.get(i.host_id) if i.host_id is not None else None
+        if cl is None:
+            n += 1
+        elif cl not in seen:
+            seen.add(cl)
+            n += 1
+    return n
+
+
 def check_set(
     instances: Sequence[JobInstance],
     comparator: Optional[Comparator],
     min_quorum: int,
+    clusters: Optional[Dict[int, int]] = None,
 ) -> ValidationResult:
     """Find a canonical instance among successful instances (§4).
 
@@ -458,6 +478,13 @@ def check_set(
     So in the a~b, b~c, a!~c chain visited as [a, b, c]: b joins a's group,
     c is compared against a (the representative), fails, and opens its own
     group — {a, b}, {c}.
+
+    With ``clusters`` (the defense layer's tick-start suspicion-cluster
+    snapshot, host_id -> cluster id), quorum support is counted by
+    :func:`effective_quorum_size` — same-cluster replicas are one vote —
+    both for the quorum gate and for ranking the winning group (effective
+    size first, then raw size, then creation order). Without clusters the
+    behavior is bit-identical to the original.
     """
     cmp = comparator or bitwise_equal
     succ = [i for i in instances if i.outcome == InstanceOutcome.SUCCESS]
@@ -476,13 +503,18 @@ def check_set(
         if not placed:
             groups.append([inst])
 
-    groups.sort(key=len, reverse=True)
+    if clusters:
+        eff = lambda g: effective_quorum_size(g, clusters)  # noqa: E731
+        groups.sort(key=lambda g: (eff(g), len(g)), reverse=True)
+    else:
+        eff = len
+        groups.sort(key=len, reverse=True)
     best = groups[0]
     # "a quorum of consistent instances" (§3.4/§4): the largest equivalent
     # group must reach min_quorum (for the min_quorum-sized initial set this
     # is exactly the paper's strict-majority-of-these condition; for larger
     # sets it is what terminates the repeat-until-quorum loop).
-    if len(best) >= min_quorum:
+    if eff(best) >= min_quorum:
         canonical = best[0]
         valid = list(best)
         invalid = [i for g in groups[1:] for i in g]

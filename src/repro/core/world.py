@@ -118,6 +118,10 @@ class HostArrays:
         self.b_hi = np.zeros(0, dtype=np.float64)
         self.time_slice = np.zeros(0, dtype=np.float64)
         self.sched_ncpu = np.zeros(0, dtype=np.float64)  # §6.1 usable CPUs
+        # -- defense-layer columns (§3.4): interned HR class id and current
+        # suspicion-cluster id (synced from DefenseLayer); -1 = none --
+        self.hr_id = np.zeros(0, dtype=np.int64)
+        self.suspect_cluster = np.zeros(0, dtype=np.int64)
         # per-resource-type instance counts / presence (grown lazily)
         self.rtypes: List[ResourceType] = [ResourceType.CPU]
         self.nins: Dict[ResourceType, np.ndarray] = {
@@ -171,12 +175,15 @@ class HostArrays:
         for name in (
             "ids", "alive", "available", "gen", "last_update", "busy",
             "flops", "capacity", "cap_ncpu", "ram", "ram_frac", "b_hi",
-            "time_slice", "sched_ncpu",
+            "time_slice", "sched_ncpu", "hr_id", "suspect_cluster",
         ):
             old = getattr(self, name)
             new = np.zeros(cap, dtype=old.dtype)
             new[: old.shape[0]] = old
             setattr(self, name, new)
+        # -1 sentinels for the defense columns' fresh slots
+        self.hr_id[self._cap:] = -1
+        self.suspect_cluster[self._cap:] = -1
         for d in (self.nins, self.has):
             for rt, old in d.items():
                 new = np.zeros(cap, dtype=old.dtype)
@@ -220,7 +227,7 @@ class HostArrays:
     # registration / churn
     # ------------------------------------------------------------------
 
-    def add_host(self, host_id: int, client: "Client", cap_ncpu: float) -> int:
+    def add_host(self, host_id: int, client: "Client", cap_ncpu: float, hr_id: int = -1) -> int:
         """Register a host and mirror its client's static columns."""
         if host_id in self.index:
             raise ValueError(f"host {host_id} already registered")
@@ -235,6 +242,8 @@ class HostArrays:
         self.gen[i] = 0
         self.last_update[i] = 0.0
         self.cap_ncpu[i] = cap_ncpu
+        self.hr_id[i] = hr_id
+        self.suspect_cluster[i] = -1
         self.clients.append(client)
         self.queue_jobs.append([])
         self.row_of.append({})
@@ -279,6 +288,8 @@ class HostArrays:
             self.q_count[i] = 0
         self.alive[i] = False
         self.available[i] = False
+        self.hr_id[i] = -1
+        self.suspect_cluster[i] = -1
         self.clients[i] = None
         self.queue_jobs[i] = []
         self.row_of[i] = {}
