@@ -1,0 +1,45 @@
+"""reprolint — the AST-based invariant checker for this repo's contracts.
+
+Every engine here is trusted only because of a handful of hand-enforced
+contracts: RNG-stream neutrality across the scalar/vector paths,
+IEEE-order float-op mirroring in the batch engines, churn-purges-
+everything per-host hygiene, frozen scenario specs, and observer-routed
+store mutations. PRs 1–7 each re-discovered violations of these by
+debugging parity failures after the fact; reprolint checks them
+mechanically, before a failure localizes them for you.
+
+Usage::
+
+    from repro.analysis import run_checks
+    report = run_checks(["src/repro"], baseline_path="reprolint_baseline.json")
+    assert report.ok, [f.format() for f in report.new]
+
+or from the command line::
+
+    python -m repro.analysis src/repro --baseline reprolint_baseline.json
+
+Rules (stdlib ``ast`` only — no new runtime deps):
+
+===============  =========================================================
+rule id          contract
+===============  =========================================================
+rng-discipline   draws only via seeded entry points / draw caches
+purge-complete   per-host containers cleared on forget_host/churn paths
+parity-float     batch engines fold floats in the scalar loop's order
+frozen-mut       frozen specs immutable outside __post_init__
+index-bypass     tracked store-row fields never written past the observer
+===============  =========================================================
+"""
+from .config import ALL_RULES, RULE_CONTRACTS
+from .engine import run_checks
+from .findings import Finding, Report, dump_baseline, load_baseline
+
+__all__ = [
+    "ALL_RULES",
+    "Finding",
+    "Report",
+    "RULE_CONTRACTS",
+    "dump_baseline",
+    "load_baseline",
+    "run_checks",
+]

@@ -531,7 +531,7 @@ class BatchClientEngine:
         active = live_w.any(axis=0) if J else np.zeros(H, dtype=bool)
         # live candidates per WRR rank, decremented as jobs finish: lets the
         # greedy skip exhausted rows (most of a ragged batch's padding)
-        row_counts = not_done.sum(axis=1)
+        row_counts = not_done.sum(axis=1)  # reprolint: ignore[parity-float] (bool count, integer-exact)
         miss_events: List[Tuple[np.ndarray, np.ndarray]] = []
 
         cap0 = None  # leftover caps of the *first* greedy (the idle set)

@@ -113,6 +113,23 @@ class Coordinator:
 
     # ------------------------------------------------------------------
 
+    def forget_host(self, host_id: int) -> Optional[str]:
+        """Purge a departed host's assignment row (churn hygiene).
+
+        Without this, a churned host stays in ``assignments`` forever:
+        ``attached_hosts`` keeps reporting it, so a project's apparent
+        fleet never shrinks, and long-churn coordinated runs leak one row
+        per departed host. Returns the project the host was assigned to
+        (None if unassigned) so callers can surface a detach if the host
+        ever reappears. The volunteer's prefs are *not* touched — a
+        volunteer outlives any one host (§2.3) and may attach new ones.
+        """
+        return self.assignments.pop(host_id, None)
+
+    def forget_volunteer(self, volunteer_id: int) -> None:
+        """Drop a volunteer's keyword prefs (account deletion, §2.3)."""
+        self.volunteer_prefs.pop(volunteer_id, None)
+
     def attached_hosts(self, project: str) -> List[int]:
         return [h for h, p in self.assignments.items() if p == project]
 

@@ -51,7 +51,11 @@ class CreditSystem:
     min_samples: int = 3
     # statistics of PFC(J)/est_flop_count(J)
     version_stats: Dict[int, OnlineStats] = field(default_factory=dict)
-    host_version_stats: Dict[Tuple[int, int], OnlineStats] = field(default_factory=dict)
+    # deliberately retained across host removal: straggler instances that
+    # report after their host departed still need the (host, version)
+    # normalization history for fair credit (§7; see the rationale on
+    # ProjectServer.remove_host).
+    host_version_stats: Dict[Tuple[int, int], OnlineStats] = field(default_factory=dict)  # reprolint: ignore[purge-complete]
     # totals (per host / volunteer / team), plus exponentially-weighted recent
     total: Dict[str, float] = field(default_factory=dict)
     recent: Dict[str, float] = field(default_factory=dict)

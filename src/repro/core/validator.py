@@ -334,11 +334,20 @@ _mix_cache: dict = {}
 
 
 def _mix_vector(d: int) -> np.ndarray:
-    """Fixed random odd int64 multipliers for the row linear hash."""
+    """Fixed odd int64 multipliers for the row linear hash, derived by
+    hashing the column index (blake2b, keyed) — deterministic constants
+    with no RNG namespace involved, so the rng-discipline contract (no
+    draws outside seeded entry points) holds trivially. Only pairwise
+    independence-ish mixing is needed: equal bucket rows always collide,
+    distinct rows collide with probability ~2^-64 for *any* fixed odd
+    multipliers without structure, which keyed blake2b provides."""
     r = _mix_cache.get(d)
     if r is None:
-        rs = np.random.RandomState(0xB01C)
-        r = rs.randint(-(2**62), 2**62, size=d).astype(np.int64) | np.int64(1)
+        raw = b"".join(
+            blake2b(i.to_bytes(8, "little"), digest_size=8, key=b"reprolint-mix").digest()
+            for i in range(d)
+        )
+        r = np.frombuffer(raw, dtype="<i8").astype(np.int64) | np.int64(1)
         _mix_cache[d] = r
     return r
 

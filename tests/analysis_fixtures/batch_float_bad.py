@@ -1,0 +1,27 @@
+"""parity-float true positives (file named batch_*.py to enter scope)."""
+import math
+
+import numpy as np
+
+
+def total_runtime(col: np.ndarray) -> float:
+    return float(np.sum(col))  # pairwise summation, not the scalar fold
+
+
+def mean_credit(col: np.ndarray) -> float:
+    return float(col.mean())  # method form of the same unordered reduction
+
+
+def product_term(col: np.ndarray) -> float:
+    return float(np.prod(col))
+
+
+def compensated(xs) -> float:
+    return math.fsum(xs)  # compensated summation: not the oracle's fold
+
+
+def accumulate_over_hosts(host_ids, table) -> float:
+    acc = 0.0
+    for hid in set(host_ids):  # hash order feeds a float fold
+        acc += table[hid]
+    return acc

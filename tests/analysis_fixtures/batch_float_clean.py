@@ -1,0 +1,21 @@
+"""parity-float clean twin: order-mirroring folds (file in batch_* scope)."""
+import numpy as np
+
+
+def total_runtime(col: np.ndarray) -> float:
+    return float(np.add.reduce(col))  # sequential fold, scalar-loop order
+
+
+def min_deadline(col: np.ndarray) -> float:
+    return float(np.minimum.reduce(col))
+
+
+def counts(rows: np.ndarray, n: int) -> np.ndarray:
+    return np.bincount(rows, minlength=n)
+
+
+def accumulate_over_hosts(host_ids, table) -> float:
+    acc = 0.0
+    for hid in sorted(set(host_ids)):  # sorted(): fold order pinned
+        acc += table[hid]
+    return acc

@@ -1,0 +1,37 @@
+"""purge-complete true positives: host-keyed containers with no purge path."""
+from dataclasses import dataclass, field
+from typing import Dict, Tuple
+
+
+@dataclass
+class LeakyTracker:
+    """Both detection heuristics fire: name fragment and host-id subscript."""
+
+    host_scores: Dict[int, float] = field(default_factory=dict)  # name says host
+    latencies: Dict[int, list] = field(default_factory=dict)  # subscript says host
+
+    def record(self, host_id: int, score: float, ms: float) -> None:
+        self.host_scores[host_id] = score
+        self.latencies.setdefault(host_id, []).append(ms)
+
+
+class LeakyInitStyle:
+    """Containers declared in __init__, cleared nowhere."""
+
+    def __init__(self) -> None:
+        self.by_host: Dict[int, int] = {}
+
+    def bump(self, hid: int) -> None:
+        self.by_host[hid] = self.by_host.get(hid, 0) + 1
+
+
+@dataclass
+class HalfPurged:
+    """Has a forget_host — but it only clears one of the two containers."""
+
+    host_state: Dict[int, float] = field(default_factory=dict)
+    host_extra: Dict[Tuple[int, int], float] = field(default_factory=dict)
+
+    def forget_host(self, host_id: int) -> None:
+        self.host_state.pop(host_id, None)
+        # host_extra deliberately forgotten: the rule must still flag it

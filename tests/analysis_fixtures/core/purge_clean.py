@@ -1,0 +1,42 @@
+"""purge-complete clean twin: every host-keyed container has a purge path."""
+from dataclasses import dataclass, field
+from typing import Dict
+
+
+@dataclass
+class TidyTracker:
+    host_scores: Dict[int, float] = field(default_factory=dict)
+    latencies: Dict[int, list] = field(default_factory=dict)
+    jobs_by_id: Dict[int, object] = field(default_factory=dict)  # job-keyed: out of scope
+
+    def record(self, host_id: int, score: float, ms: float) -> None:
+        self.host_scores[host_id] = score
+        self.latencies.setdefault(host_id, []).append(ms)
+
+    def forget_host(self, host_id: int) -> None:
+        self.host_scores.pop(host_id, None)
+        self.latencies.pop(host_id, None)
+
+
+class TidyChurnStyle:
+    """Cleared through a churn-named path instead of forget_host."""
+
+    def __init__(self) -> None:
+        self.by_host: Dict[int, int] = {}
+
+    def bump(self, hid: int) -> None:
+        self.by_host[hid] = self.by_host.get(hid, 0) + 1
+
+    def _churn(self, hid: int) -> None:
+        self.by_host.pop(hid, None)
+
+
+@dataclass
+class TickPlan:
+    """Per-tick ephemeral by whitelist membership would be one way out;
+    this one is simply not host-keyed (seq-keyed), so it never fires."""
+
+    callbacks: Dict[int, object] = field(default_factory=dict)
+
+    def pop(self, seq: int):
+        return self.callbacks.pop(seq, None)

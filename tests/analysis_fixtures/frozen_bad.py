@@ -1,0 +1,30 @@
+"""frozen-mut true positives: mutation of frozen specs outside __post_init__."""
+from dataclasses import dataclass, field
+from typing import Tuple
+
+
+@dataclass(frozen=True)
+class LocalSpec:
+    seed: int
+    n_hosts: int = 10
+    derived: Tuple[int, ...] = field(default=())
+
+    def __post_init__(self) -> None:
+        # sanctioned: construction-time derivation
+        object.__setattr__(self, "derived", (self.seed, self.n_hosts))
+
+    def rescale(self, k: int) -> None:
+        object.__setattr__(self, "n_hosts", self.n_hosts * k)  # mutation!
+
+
+def tweak_local(spec: LocalSpec) -> None:
+    spec.n_hosts = 99  # would raise FrozenInstanceError; lint catches it first
+
+
+def tweak_known(spec: "ScenarioSpec") -> None:
+    # ScenarioSpec comes from config.KNOWN_FROZEN_CLASSES, not this file
+    spec.seed = 1
+
+
+def force_known(spec: "ScenarioSpec") -> None:
+    object.__setattr__(spec, "seed", 2)

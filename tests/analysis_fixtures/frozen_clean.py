@@ -1,0 +1,32 @@
+"""frozen-mut clean twin: replace() derivation and __post_init__ writes."""
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Tuple
+
+
+@dataclass(frozen=True)
+class LocalSpec:
+    seed: int
+    n_hosts: int = 10
+    derived: Tuple[int, ...] = field(default=())
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "derived", (self.seed, self.n_hosts))
+
+
+@dataclass
+class MutableConfig:
+    """Not frozen: plain mutation is fine."""
+
+    retries: int = 3
+
+    def bump(self) -> None:
+        self.retries += 1
+
+
+def rescaled(spec: LocalSpec, k: int) -> LocalSpec:
+    return dataclasses.replace(spec, n_hosts=spec.n_hosts * k)
+
+
+def mutate_unannotated(thing) -> None:
+    thing.n_hosts = 99  # no frozen annotation: out of the rule's reach

@@ -1,0 +1,13 @@
+"""index-bypass true positives: tracked-field writes that skip the observer."""
+
+
+def sneak_state(inst) -> None:
+    object.__setattr__(inst, "state", 2)  # tracked field, observer skipped
+
+
+def sneak_dict(inst) -> None:
+    inst.__dict__["validate_state"] = 1  # tracked field via __dict__
+
+
+def sneak_update(inst) -> None:
+    inst.__dict__.update({"outcome": 3, "claimed_credit": 0.5})  # outcome tracked

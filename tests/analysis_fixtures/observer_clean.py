@@ -1,0 +1,11 @@
+"""index-bypass clean twin: observed assignment and untracked-field bypasses."""
+
+
+def set_state(inst) -> None:
+    inst.state = 2  # normal assignment: routed through IndexObserved
+
+
+def set_untracked(inst) -> None:
+    # untracked fields carry no index obligations; the fast path is fine
+    inst.__dict__["claimed_credit"] = 0.5
+    object.__setattr__(inst, "_store", None)

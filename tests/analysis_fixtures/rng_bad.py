@@ -1,0 +1,25 @@
+"""rng-discipline true positives: every draw shape the rule must catch."""
+import random
+
+import numpy as np
+
+
+def jitter(x: float) -> float:
+    return x * random.uniform(0.9, 1.1)  # global-stream draw
+
+
+def pick(items):
+    return random.choice(items)  # global-stream draw
+
+
+def make_rng():
+    return random.Random()  # unseeded construction
+
+
+def legacy_table(n: int):
+    rs = np.random.RandomState(7)  # legacy hidden-state RNG
+    return rs.rand(n)
+
+
+def entropy_rng():
+    return np.random.default_rng()  # unseeded default_rng

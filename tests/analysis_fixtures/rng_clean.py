@@ -1,0 +1,23 @@
+"""rng-discipline clean twin: the sanctioned seed-entry forms."""
+import random
+
+import numpy as np
+
+
+def make_seeded(seed: int) -> random.Random:
+    return random.Random(seed)  # seeded entry point
+
+
+def make_salted(seed: int, index: int) -> random.Random:
+    # integer-arithmetic salt, scenario-generation style
+    return random.Random(seed * 2_654_435_761 + 97 * index + 13)
+
+
+def draw_from(rng: random.Random) -> float:
+    # drawing from a caller-supplied rng object is always fine: the
+    # object's provenance is what the seed-entry rule pins down
+    return rng.uniform(0.9, 1.1)
+
+
+def make_np(seed: int):
+    return np.random.default_rng(np.random.SeedSequence([seed, 0xB01AC]))

@@ -1,0 +1,17 @@
+"""Inline-suppression fixture: each finding is silenced on its own line."""
+import random
+
+import numpy as np
+
+
+def fixed_table(n: int):
+    rs = np.random.RandomState(7)  # reprolint: ignore[rng-discipline]
+    return rs.rand(n)
+
+
+def any_rule_jitter(x: float) -> float:
+    return x * random.uniform(0.9, 1.1)  # reprolint: ignore
+
+
+def unsuppressed_draw():
+    return random.random()  # the one finding this file must still produce

@@ -44,6 +44,45 @@ class TestCoordinator:
         assert len(seen) >= 2, "linear-bounded balances never rotated the host"
         assert all(a.total_used > 0 for a in co.allocator.accounts.values())
 
+    def test_forget_host_purges_assignment(self):
+        """Churn hygiene (the reprolint purge-complete contract): a departed
+        host must vanish from the coordinator's per-host state — before the
+        fix, ``attached_hosts`` reported churned hosts forever."""
+        co = self.make()
+        co.register_volunteer(1, KeywordPrefs())
+        r = co.am_rpc(host_id=10, volunteer_id=1, now=0.0)
+        project = r.attach[0].name
+        assert 10 in co.attached_hosts(project)
+
+        was = co.forget_host(10)
+        assert was == project
+        assert 10 not in co.assignments
+        assert 10 not in co.attached_hosts(project)
+        # idempotent; unknown hosts are a no-op
+        assert co.forget_host(10) is None
+        assert co.forget_host(999) is None
+        # the volunteer survives host churn (§2.3): prefs stay, and a new
+        # host of the same volunteer can still be assigned
+        assert 1 in co.volunteer_prefs
+        r2 = co.am_rpc(host_id=11, volunteer_id=1, now=0.0)
+        assert r2.attach
+        # account deletion drops the prefs too
+        co.forget_volunteer(1)
+        assert 1 not in co.volunteer_prefs
+
+    def test_forget_host_rebalances_future_assignment(self):
+        """After a heavy-usage host departs, its project's burned balance
+        stays debited, but no phantom row skews attached_hosts-based views."""
+        co = self.make()
+        co.register_volunteer(1, KeywordPrefs())
+        co.am_rpc(10, 1, now=0.0)
+        co.am_rpc(10, 1, now=600.0, used_seconds=50_000.0)
+        co.forget_host(10)
+        assert co.assignments == {}
+        # a fresh host assigns normally against the debited balances
+        r = co.am_rpc(20, 1, now=1200.0)
+        assert r.attach and co.attached_hosts(r.attach[0].name) == [20]
+
     def test_guaranteed_share_before_any_volunteers(self):
         """§10.1: 'a prospective new project can be guaranteed a certain
         amount of computing power before any investment is made'."""

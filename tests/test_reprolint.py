@@ -1,0 +1,293 @@
+"""reprolint analyzer tests: exact finding sets on the fixture corpus, the
+suppression/baseline machinery, the CLI, and — the point of the whole
+exercise — that the live tree is reprolint-clean.
+
+Every rule is proven non-vacuous here: its ``*_bad.py`` fixture must
+produce the exact expected finding set, and its clean twin must produce
+nothing.
+"""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import ALL_RULES, dump_baseline, load_baseline, run_checks
+from repro.analysis import config as rlconfig
+
+pytestmark = pytest.mark.lint
+
+FIXTURES = Path(__file__).parent / "analysis_fixtures"
+REPO_ROOT = Path(__file__).parent.parent
+
+
+def findings_on(name: str):
+    report = run_checks([str(FIXTURES / name)])
+    return report
+
+
+def rule_symbol_set(report):
+    return {(f.rule, f.symbol) for f in report.findings}
+
+
+# ---------------------------------------------------------------------------
+# rng-discipline
+# ---------------------------------------------------------------------------
+
+
+class TestRngRule:
+    def test_bad_fixture_exact_findings(self):
+        report = findings_on("rng_bad.py")
+        assert rule_symbol_set(report) == {
+            ("rng-discipline", "jitter:random.uniform"),
+            ("rng-discipline", "pick:random.choice"),
+            ("rng-discipline", "make_rng:random.Random()"),
+            ("rng-discipline", "legacy_table:np.random.RandomState"),
+            ("rng-discipline", "entropy_rng:np.random.default_rng()"),
+        }
+        # precise output format: path:line:col rule-id message
+        lead = report.findings[0].format()
+        path, line, col_and_rest = lead.split(":", 2)
+        assert path.endswith("rng_bad.py") and int(line) > 0
+        # each message names the contract and the whitelist that would apply
+        for f in report.findings:
+            assert "contract" in f.message and "Whitelist" in f.message
+
+    def test_clean_twin(self):
+        assert findings_on("rng_clean.py").findings == []
+
+
+# ---------------------------------------------------------------------------
+# purge-complete
+# ---------------------------------------------------------------------------
+
+
+class TestPurgeRule:
+    def test_bad_fixture_exact_findings(self):
+        report = findings_on("core/purge_bad.py")
+        assert rule_symbol_set(report) == {
+            ("purge-complete", "LeakyTracker.host_scores"),
+            ("purge-complete", "LeakyTracker.latencies"),
+            ("purge-complete", "LeakyInitStyle.by_host"),
+            ("purge-complete", "HalfPurged.host_extra"),
+        }
+
+    def test_clean_twin(self):
+        assert findings_on("core/purge_clean.py").findings == []
+
+    def test_out_of_scope_without_core_segment(self):
+        """The same leaky code outside core/ is out of the rule's scope."""
+        src = (FIXTURES / "core/purge_bad.py").read_text()
+        import shutil
+        import tempfile
+
+        with tempfile.TemporaryDirectory() as d:
+            p = Path(d) / "purge_bad.py"
+            p.write_text(src)
+            assert run_checks([str(p)]).findings == []
+
+
+# ---------------------------------------------------------------------------
+# parity-float
+# ---------------------------------------------------------------------------
+
+
+class TestFloatRule:
+    def test_bad_fixture_exact_findings(self):
+        report = findings_on("batch_float_bad.py")
+        assert rule_symbol_set(report) == {
+            ("parity-float", "total_runtime:np.sum"),
+            ("parity-float", "mean_credit:.mean()"),
+            ("parity-float", "product_term:np.prod"),
+            ("parity-float", "compensated:math.fsum"),
+            ("parity-float", "accumulate_over_hosts:set-iter-accum"),
+        }
+
+    def test_clean_twin(self):
+        assert findings_on("batch_float_clean.py").findings == []
+
+    def test_scope_is_engine_files_only(self):
+        """np.mean in a non-engine file (models, runtime) is not flagged."""
+        import shutil
+        import tempfile
+
+        src = (FIXTURES / "batch_float_bad.py").read_text()
+        with tempfile.TemporaryDirectory() as d:
+            p = Path(d) / "layers.py"
+            p.write_text(src)
+            assert run_checks([str(p)]).findings == []
+
+
+# ---------------------------------------------------------------------------
+# frozen-mut
+# ---------------------------------------------------------------------------
+
+
+class TestFrozenRule:
+    def test_bad_fixture_exact_findings(self):
+        report = findings_on("frozen_bad.py")
+        assert rule_symbol_set(report) == {
+            ("frozen-mut", "LocalSpec.n_hosts"),  # object.__setattr__(self, ...)
+            ("frozen-mut", "ScenarioSpec.seed"),  # known-frozen annotation
+        }
+        # the LocalSpec symbol fires twice: method escape + annotated param
+        syms = [f.symbol for f in report.findings]
+        assert syms.count("LocalSpec.n_hosts") == 2
+        assert syms.count("ScenarioSpec.seed") == 2
+
+    def test_clean_twin(self):
+        assert findings_on("frozen_clean.py").findings == []
+
+
+# ---------------------------------------------------------------------------
+# index-bypass
+# ---------------------------------------------------------------------------
+
+
+class TestBypassRule:
+    def test_bad_fixture_exact_findings(self):
+        report = findings_on("observer_bad.py")
+        assert rule_symbol_set(report) == {
+            ("index-bypass", "sneak_state:state"),
+            ("index-bypass", "sneak_dict:validate_state"),
+            ("index-bypass", "sneak_update:outcome"),
+        }
+
+    def test_clean_twin(self):
+        assert findings_on("observer_clean.py").findings == []
+
+    def test_tracked_fields_config_matches_types(self):
+        """config.TRACKED_FIELDS mirrors the IndexObserved classes — if a
+        tracked field is added to types.py, the rule must learn it."""
+        from repro.core.types import Job, JobInstance
+
+        assert rlconfig.TRACKED_FIELDS == frozenset(
+            Job._TRACKED | JobInstance._TRACKED
+        )
+
+    def test_store_module_is_whitelisted(self):
+        """The store's fused bulk writers are the sanctioned bypass."""
+        store = REPO_ROOT / "src/repro/core/store.py"
+        assert run_checks([str(store)]).findings == []
+
+
+# ---------------------------------------------------------------------------
+# suppressions, baseline ratchet, CLI
+# ---------------------------------------------------------------------------
+
+
+class TestSuppression:
+    def test_inline_ignores(self):
+        report = findings_on("suppressed_ok.py")
+        assert rule_symbol_set(report) == {
+            ("rng-discipline", "unsuppressed_draw:random.random"),
+        }
+        assert {f.symbol for f in report.suppressed} == {
+            "fixed_table:np.random.RandomState",
+            "any_rule_jitter:random.uniform",
+        }
+
+
+class TestBaseline:
+    def test_ratchet_roundtrip(self, tmp_path):
+        bad = str(FIXTURES / "rng_bad.py")
+        report = run_checks([bad])
+        assert len(report.new) == 5 and not report.ok
+
+        # grandfather everything: the same findings are now baselined
+        bl = tmp_path / "baseline.json"
+        dump_baseline(str(bl), report.findings)
+        report2 = run_checks([bad], baseline_path=str(bl))
+        assert report2.ok
+        assert len(report2.baselined) == 5 and report2.new == []
+
+        # shrink the tree (scan the clean twin instead): every baseline
+        # entry goes stale — the ratchet direction the CI job enforces
+        report3 = run_checks([str(FIXTURES / "rng_clean.py")], baseline_path=str(bl))
+        assert report3.ok and len(report3.stale_baseline) == 5
+
+        # a baseline can never hide a *new* finding
+        entries = load_baseline(str(bl))
+        assert all(e[1] == "rng-discipline" for e in entries)
+        report4 = run_checks([str(FIXTURES / "observer_bad.py")], baseline_path=str(bl))
+        assert not report4.ok and len(report4.new) == 3
+
+    def test_baseline_keys_ignore_line_numbers(self, tmp_path):
+        """Unrelated edits (line drift) must not churn the baseline: keys
+        are (path, rule, symbol)."""
+        src = (FIXTURES / "rng_bad.py").read_text()
+        p = tmp_path / "rng_bad.py"
+        p.write_text(src)
+        bl = tmp_path / "baseline.json"
+        dump_baseline(str(bl), run_checks([str(p)]).findings)
+        p.write_text("# a new comment shifting every line\n" + src)
+        report = run_checks([str(p)], baseline_path=str(bl))
+        assert report.ok and len(report.baselined) == 5
+
+
+class TestCLI:
+    def run_cli(self, *args, cwd=None):
+        env = dict(os.environ)
+        env["PYTHONPATH"] = str(REPO_ROOT / "src") + os.pathsep + env.get("PYTHONPATH", "")
+        return subprocess.run(
+            [sys.executable, "-m", "repro.analysis", *args],
+            capture_output=True,
+            text=True,
+            env=env,
+            cwd=cwd or str(REPO_ROOT),
+        )
+
+    def test_exit_codes_and_report(self, tmp_path):
+        report_file = tmp_path / "REPROLINT_report.json"
+        r = self.run_cli(
+            str(FIXTURES / "rng_bad.py"), "--no-baseline", "--report", str(report_file)
+        )
+        assert r.returncode == 1
+        assert "rng-discipline" in r.stdout
+        data = json.loads(report_file.read_text())
+        assert data["tool"] == "reprolint" and not data["ok"]
+        assert len(data["new"]) == 5
+        assert set(data["rules"]) == set(ALL_RULES)
+
+        r2 = self.run_cli(str(FIXTURES / "rng_clean.py"), "--no-baseline")
+        assert r2.returncode == 0
+
+    def test_fail_on_stale_enforces_shrink(self, tmp_path):
+        bl = tmp_path / "baseline.json"
+        dump_baseline(str(bl), run_checks([str(FIXTURES / "rng_bad.py")]).findings)
+        r = self.run_cli(
+            str(FIXTURES / "rng_clean.py"), "--baseline", str(bl), "--fail-on-stale"
+        )
+        assert r.returncode == 1 and "stale" in r.stdout
+        r2 = self.run_cli(str(FIXTURES / "rng_clean.py"), "--baseline", str(bl))
+        assert r2.returncode == 0  # stale alone is a warning without the flag
+
+
+# ---------------------------------------------------------------------------
+# the live tree
+# ---------------------------------------------------------------------------
+
+
+class TestLiveTree:
+    def test_src_repro_is_clean_against_baseline(self):
+        """The acceptance gate: `python -m repro.analysis src/repro` exits 0
+        — every finding fixed, inline-suppressed, or baselined."""
+        baseline = REPO_ROOT / "reprolint_baseline.json"
+        report = run_checks(
+            [str(REPO_ROOT / "src/repro")],
+            baseline_path=str(baseline) if baseline.exists() else None,
+            root=str(REPO_ROOT),
+        )
+        assert report.ok, "\n".join(f.format() for f in report.new)
+        # and the ratchet holds: no stale grandfathered entries linger
+        assert report.stale_baseline == []
+
+    def test_known_true_positive_fixes_stay_fixed(self):
+        """Module-level regression pins for the violations this pass
+        surfaced: the coordinator purge path and the validator mix-vector
+        rederivation must keep their modules reprolint-clean."""
+        for mod in ("core/coordinator.py", "core/validator.py", "core/credit.py"):
+            report = run_checks([str(REPO_ROOT / "src/repro" / mod)])
+            assert report.ok, "\n".join(f.format() for f in report.new)
