@@ -1,0 +1,245 @@
+"""JAX execution backend vs the NumPy engines at 1M-host scale (ISSUE 9).
+
+Times the two dense passes the ``backend="jax"`` tentpole moved on-device,
+against the NumPy engine branches they mirror bit-for-bit:
+
+  * **dispatch scoring** — the §6.4 base-score + runtime-estimate kernel
+    over a 1M-candidate masked set (``jax_backend.dispatch_scores`` vs the
+    ``BatchDispatchEngine.candidate_rows`` NumPy branch, replicated inline
+    with identical IEEE op order);
+  * **world accrual tick** — the fused clamped-charge pass over a 1M-host
+    columnar world (``HostArrays._advance_cols`` on a ``backend="jax"``
+    world — device-resident column mirrors, dirty-range uploads, donated
+    buffers — vs the same method's NumPy K-loop).
+
+Parity is asserted bitwise at a small population before timing (refuse to
+benchmark diverged backends). Worlds are assembled synthetically (columns
+filled directly, no per-host Python objects) so 1M hosts build in seconds;
+the accrual pass is timed through ``_advance_cols`` on precomputed active
+slots, isolating the kernel both backends share from the per-host id
+bookkeeping that is identical on either side.
+
+Acceptance floor (CI, ``--smoke`` / ``BENCH_JAX_SMOKE=1``): the JAX world
+accrual pass must stay within **4x** of the NumPy pass wall-clock at the
+smoke population. This is deliberately a *within-factor* floor, not a
+speedup floor: on a small CPU (CI runs single-core CPU jax) XLA's
+dispatch overhead and lack of in-place column mutation make parity-to-
+modest-slowdown the honest expectation — the backend targets wide SIMD
+units and accelerators, where the same staged jits fuse into a handful of
+device passes. Results go to ``benchmarks/BENCH_jax.json``
+(schema {schema, rows, acceptance}).
+"""
+from __future__ import annotations
+
+import os
+import sys
+from typing import Optional
+
+import numpy as np
+
+from .common import RESULTS, emit, timer, write_bench_json
+
+from repro.core import ResourceType
+from repro.core.jax_backend import HAVE_JAX, dispatch_scores
+from repro.core.scheduler import W_BALANCE, W_KEYWORD, W_PRIORITY, W_SKIPPED
+from repro.core.world import HostArrays
+
+CPU = ResourceType.CPU
+
+#: CI floor: jax accrual pass wall-clock <= FLOOR_FACTOR * numpy pass.
+FLOOR_FACTOR = 4.0
+TICKS = 10  # timed accrual ticks (post-warmup) per backend
+
+
+# ---------------------------------------------------------------------------
+# dispatch scoring
+# ---------------------------------------------------------------------------
+
+
+def _score_inputs(n: int, seed: int = 7):
+    rs = np.random.RandomState(seed)
+    return (
+        rs.rand(n) < 0.5,  # kvec
+        rs.uniform(-10, 10, n),  # bal
+        rs.uniform(-5, 5, n),  # prio
+        rs.randint(0, 9, n).astype(np.float64),  # skips
+        rs.uniform(1e9, 1e14, n),  # flop
+        np.where(rs.rand(n) < 0.1, 0.0, rs.uniform(1e8, 1e11, n)),  # pf
+        0.8,  # avail
+    )
+
+
+def _np_scores(kvec, bal, prio, skips, flop, pf, avail):
+    """Inline replica of the engine's NumPy scoring branch (same op order)."""
+    scores = W_KEYWORD * kvec
+    scores += W_BALANCE * bal
+    scores += W_PRIORITY * prio
+    scores += W_SKIPPED * np.minimum(skips, 5.0)
+    est = np.full(kvec.shape, np.inf, dtype=np.float64)
+    pos = pf > 0.0
+    est[pos] = flop[pos] / pf[pos]
+    scaled = est / avail if avail > 0 else np.full(kvec.shape, np.inf)
+    return scores, est, scaled
+
+
+def _bench_scoring(n: int):
+    inp = _score_inputs(n)
+    weights = (W_KEYWORD, W_BALANCE, W_PRIORITY, W_SKIPPED)
+
+    want = _np_scores(*inp)
+    got = dispatch_scores(*inp, weights)
+    for a, b in zip(got, want):
+        assert np.array_equal(a, b), "scoring backends diverged"
+
+    t0 = timer()
+    for _ in range(TICKS):
+        _np_scores(*inp)
+    np_s = (timer() - t0) / TICKS
+
+    t0 = timer()
+    for _ in range(TICKS):
+        dispatch_scores(*inp, weights)
+    jx_s = (timer() - t0) / TICKS
+
+    emit(f"jax_dispatch_scores_numpy_{n}", np_s * 1e6, f"wall_ms={np_s * 1e3:.1f}")
+    emit(f"jax_dispatch_scores_jax_{n}", jx_s * 1e6, f"wall_ms={jx_s * 1e3:.1f}")
+    emit(
+        f"jax_dispatch_scores_ratio_{n}", 0.0,
+        f"jax_over_numpy={jx_s / np_s:.2f}x",
+    )
+
+
+# ---------------------------------------------------------------------------
+# world accrual tick
+# ---------------------------------------------------------------------------
+
+
+def _mk_world(backend: str, n_hosts: int, K: int = 4, seed: int = 3) -> HostArrays:
+    """Synthetic columnar world: columns filled directly (no per-host
+    Python objects) so million-host populations build in seconds. Clients
+    stay ``None`` — the REC flush is per-host Python identical on both
+    backends and is not what this bench isolates."""
+    rs = np.random.RandomState(seed)
+    world = HostArrays(backend=backend)
+    world._grow_hosts(n_hosts)
+    world._grow_queue(K)
+    world.n = n_hosts
+    world.ids[:n_hosts] = np.arange(1, n_hosts + 1)
+    world.index = {h + 1: h for h in range(n_hosts)}
+    world.alive[:n_hosts] = True
+    world.available[:n_hosts] = rs.rand(n_hosts) < 0.95
+    world.clients = [None] * n_hosts
+    world.queue_jobs = [[] for _ in range(n_hosts)]
+    world.row_of = [{} for _ in range(n_hosts)]
+    world.project = [None] * n_hosts
+    world.multi = [False] * n_hosts
+    counts = rs.randint(1, K + 1, n_hosts)
+    world.q_count[:n_hosts] = counts
+    Q = world._q
+    rowmask = np.arange(Q)[:, None] < counts[None, :]
+    tot = np.where(rowmask, rs.uniform(3600.0, 7 * 86400.0, (Q, n_hosts)), 0.0)
+    run = np.where(rowmask, tot * rs.rand(Q, n_hosts) * 0.5, 0.0)
+    world.q_total[:, :n_hosts] = tot
+    world.q_runtime[:, :n_hosts] = run
+    world.q_frac[:, :n_hosts] = np.where(rowmask, run / np.maximum(tot, 1e-9), 0.0)
+    world.q_running[:, :n_hosts] = rowmask & (rs.rand(Q, n_hosts) < 0.7)
+    world.q_weight[:, :n_hosts] = np.where(rowmask, 1.0, 0.0)
+    world.q_usage[CPU][:, :n_hosts] = np.where(
+        rowmask, rs.choice([0.5, 1.0, 2.0], (Q, n_hosts)), 0.0
+    )
+    return world
+
+
+def _active(world: HostArrays, n_hosts: int, seed: int = 5):
+    rs = np.random.RandomState(seed)
+    act = world.available[:n_hosts] & (rs.rand(n_hosts) < 0.9)
+    sub = np.flatnonzero(act)
+    dts = rs.uniform(30.0, 90.0, len(sub))
+    return sub, dts
+
+
+def _verify_parity(n_hosts: int = 10_000) -> None:
+    """Refuse to benchmark diverged backends: a few accrual passes over
+    twin synthetic worlds must leave bit-identical columns and debits."""
+    wn = _mk_world("numpy", n_hosts)
+    wj = _mk_world("jax", n_hosts)
+    for tick in range(3):
+        sub, dts = _active(wn, n_hosts, seed=5 + tick)
+        dn, tn = wn._advance_cols(sub, dts)
+        dj, tj = wj._advance_cols(sub, dts)
+        assert np.array_equal(dn, dj) and np.array_equal(tn, tj)
+    assert np.array_equal(wn.q_runtime, wj.q_runtime)
+    assert np.array_equal(wn.q_frac, wj.q_frac)
+    assert np.array_equal(wn.busy, wj.busy)
+
+
+def _bench_world(n_hosts: int) -> float:
+    sub, dts = _active(_mk_world("numpy", n_hosts), n_hosts)
+
+    wn = _mk_world("numpy", n_hosts)
+    wn._advance_cols(sub, dts)  # warm page cache symmetrically
+    t0 = timer()
+    for _ in range(TICKS):
+        wn._advance_cols(sub, dts)
+    np_s = (timer() - t0) / TICKS
+
+    wj = _mk_world("jax", n_hosts)
+    wj._advance_cols(sub, dts)  # warmup: full upload + jit compile
+    t0 = timer()
+    for _ in range(TICKS):
+        wj._advance_cols(sub, dts)
+    jx_s = (timer() - t0) / TICKS
+
+    ratio = jx_s / np_s if np_s > 0 else float("inf")
+    emit(f"jax_world_tick_numpy_{n_hosts}hosts", np_s * 1e6, f"wall_ms={np_s * 1e3:.1f}")
+    emit(f"jax_world_tick_jax_{n_hosts}hosts", jx_s * 1e6, f"wall_ms={jx_s * 1e3:.1f}")
+    emit(
+        f"jax_world_tick_ratio_{n_hosts}hosts", 0.0,
+        f"jax_over_numpy={ratio:.2f}x;floor={FLOOR_FACTOR:.1f}x;pass={ratio <= FLOOR_FACTOR}",
+    )
+    return ratio
+
+
+def run() -> None:
+    if not HAVE_JAX:
+        emit("jax_backend_unavailable", 0.0, "skipped=jax_not_importable")
+        run.acceptance = {
+            "metric": "jax backend benchmark", "pass": True,
+            "skipped": "jax not importable",
+        }
+        return
+    smoke = "--smoke" in sys.argv or bool(os.environ.get("BENCH_JAX_SMOKE"))
+    n_score = 1 << 17 if smoke else 1 << 20  # 1M candidates full
+    n_hosts = 100_000 if smoke else 1_000_000
+
+    _verify_parity()
+
+    start_row = len(RESULTS)
+    _bench_scoring(n_score)
+    ratio = _bench_world(n_hosts)
+
+    acceptance = {
+        "metric": f"jax world accrual pass within {FLOOR_FACTOR:.0f}x of numpy "
+                  f"at {n_hosts} hosts (CPU; accelerator-targeted backend)",
+        "floor_factor": FLOOR_FACTOR,
+        "measured_ratio": ratio,
+        "pass": ratio <= FLOOR_FACTOR,
+        "smoke": smoke,
+    }
+    run.acceptance = acceptance  # picked up by benchmarks.run and CI
+    write_bench_json(
+        path=os.environ.get(
+            "BENCH_JAX_JSON_PATH",
+            os.path.join(os.path.dirname(__file__), "BENCH_jax.json"),
+        ),
+        rows=RESULTS[start_row:],
+        extra={"acceptance": acceptance},
+    )
+    if smoke and not acceptance["pass"]:
+        raise SystemExit(
+            f"bench_jax smoke floor failed: {ratio:.2f}x > {FLOOR_FACTOR:.1f}x"
+        )
+
+
+if __name__ == "__main__":
+    run()

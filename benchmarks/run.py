@@ -16,6 +16,8 @@ and their paper sections:
   bench_credit      S7         device-neutral credit
   bench_scenarios   S3.4/S9    scenario layer: generation throughput;
                                clique/farm adversarial containment
+  bench_jax         (TPU adaptation) JAX execution backend vs the NumPy
+                               engines at 1M-host scale
   bench_kernels     (TPU adaptation) Pallas kernels vs oracles
   bench_grid_train  (TPU adaptation) end-to-end fault-tolerant grid training
 
@@ -40,6 +42,7 @@ def main() -> None:
         bench_daemons,
         bench_dispatch,
         bench_grid_train,
+        bench_jax,
         bench_kernels,
         bench_scenarios,
         bench_scheduling,
@@ -62,6 +65,7 @@ def main() -> None:
         bench_workfetch,
         bench_credit,
         bench_scenarios,
+        bench_jax,
         bench_kernels,
         bench_grid_train,
     ):

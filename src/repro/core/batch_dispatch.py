@@ -38,6 +38,7 @@ from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from . import jax_backend
 from .keywords import keyword_score
 from .scheduler import (
     Candidate,
@@ -82,9 +83,14 @@ class BatchDispatchEngine:
     the dispatch tail are folded back in via :meth:`apply`.
     """
 
-    def __init__(self, store: JobStore, feeder: Feeder) -> None:
+    def __init__(self, store: JobStore, feeder: Feeder,
+                 backend: str = "numpy") -> None:
         self.store = store
         self.feeder = feeder
+        # execution backend for the dense mask/score passes; "jax" routes
+        # them through core.jax_backend's staged jits (bit-identical to
+        # the NumPy path — 4th parity axis), sparse tails stay host-side
+        self.backend = jax_backend.resolve_backend(backend)
         # cache-content generation this snapshot was built at; the
         # scheduler's persistent-dispatch path rebuilds when it trails
         # ``feeder.version`` (dispatch-tail mutations arrive as events and
@@ -240,7 +246,10 @@ class BatchDispatchEngine:
         # rotated scan order, then first eligible slot per job (the scalar
         # scan's seen_jobs dedupe keeps the first valid slot it encounters)
         rot = np.arange(start, start + n) % n
-        elig = self.valid[rot] & ((self.target[rot] < 0) | (self.target[rot] == host.id))
+        if self.backend == "jax":
+            elig = jax_backend.dispatch_elig(self.valid, self.target, start, host.id)
+        else:
+            elig = self.valid[rot] & ((self.target[rot] < 0) | (self.target[rot] == host.id))
         pos = rot[elig]
         if pos.size == 0:
             return None
@@ -306,7 +315,7 @@ class BatchDispatchEngine:
             if app.hr_level != HRLevel.NONE:
                 host_hr[ai] = self._intern_hr(hr_class(host, app.hr_level))
         hr_rep = self.hr_id[reps]
-        hr_ok = (hr_rep == -1) | (hr_rep == host_hr[self.app_idx[reps]])
+        host_hr_rep = host_hr[self.app_idx[reps]]
 
         # keyword score per distinct keyword set (§2.4): "no" keyword vetoes
         kw_val = np.zeros(len(self._kw_tuples), dtype=np.float64)
@@ -320,21 +329,53 @@ class BatchDispatchEngine:
         kvec_all = kw_val[self.kw_idx[reps]]
         kok = kw_ok[self.kw_idx[reps]]
 
-        mask = g_ok[inv] & hr_ok & kok
+        if self.backend == "jax":
+            mask = jax_backend.dispatch_group_mask(g_ok[inv], hr_rep, host_hr_rep, kok)
+        else:
+            hr_ok = (hr_rep == -1) | (hr_rep == host_hr_rep)
+            mask = g_ok[inv] & hr_ok & kok
         if not mask.any():
             return None
         r = reps[mask]
         g_r = inv[mask]
 
-        # §6.4 weighted score sum — same IEEE op order as Scheduler._score
-        scores = W_KEYWORD * kvec_all[mask]
+        bal_r = None
         if sched.allocator is not None:
             bal = np.zeros(len(self._submitters), dtype=np.float64)
             for s in np.unique(self.sub_idx[r]):
                 bal[s] = sched.allocator.priority(self._submitters[int(s)], now)
-            scores += W_BALANCE * bal[self.sub_idx[r]]
-        scores += W_PRIORITY * self.prio[r]
-        scores += W_SKIPPED * np.minimum(self.skips[r], 5.0)
+            bal_r = bal[self.sub_idx[r]]
+        pf_r = g_pf[g_r]
+        res = host.resources.get(rtype)
+        avail = (res.availability if res else 1.0) * host.on_fraction
+
+        if self.backend == "jax":
+            # dense base score + runtime estimates on device; the staged
+            # jits reproduce the NumPy accumulation order bit-for-bit
+            scores, est, scaled = jax_backend.dispatch_scores(
+                kvec_all[mask], bal_r, self.prio[r], self.skips[r],
+                self.est_flop[r], pf_r, avail,
+                (W_KEYWORD, W_BALANCE, W_PRIORITY, W_SKIPPED),
+            )
+        else:
+            # §6.4 weighted score sum — same IEEE op order as Scheduler._score
+            scores = W_KEYWORD * kvec_all[mask]
+            if bal_r is not None:
+                scores += W_BALANCE * bal_r
+            scores += W_PRIORITY * self.prio[r]
+            scores += W_SKIPPED * np.minimum(self.skips[r], 5.0)
+            # fast-check inputs, vectorized: est runtime and availability-
+            # scaled runtime for the whole candidate set in two array ops
+            est = np.full(r.shape, np.inf, dtype=np.float64)
+            pos_pf = pf_r > 0.0
+            est[pos_pf] = self.est_flop[r][pos_pf] / pf_r[pos_pf]
+            if avail <= 0:
+                scaled = np.full(r.shape, np.inf, dtype=np.float64)
+            else:
+                scaled = est / avail
+
+        # sparse locality / size-match adjustments stay host-side on both
+        # backends (set intersections per row; identical += statements)
         loc_idx = np.nonzero(self.loc_mask[r])[0]
         if loc_idx.size:
             sticky = set(req.sticky_files)
@@ -346,19 +387,6 @@ class BatchDispatchEngine:
         size_hit = (q_r >= 0) & (self.size_class[r] == q_r)
         if size_hit.any():
             scores[size_hit] += W_SIZE_MATCH
-
-        # fast-check inputs, vectorized: est runtime and availability-scaled
-        # runtime for the whole candidate set in two array ops
-        pf_r = g_pf[g_r]
-        est = np.full(r.shape, np.inf, dtype=np.float64)
-        pos_pf = pf_r > 0.0
-        est[pos_pf] = self.est_flop[r][pos_pf] / pf_r[pos_pf]
-        res = host.resources.get(rtype)
-        avail = (res.availability if res else 1.0) * host.on_fraction
-        if avail <= 0:
-            scaled = np.full(r.shape, np.inf, dtype=np.float64)
-        else:
-            scaled = est / avail
 
         order = np.argsort(-scores, kind="stable")
         pos = r[order]

@@ -198,15 +198,28 @@ def _scalar_largest_group(app: App, successes: List[JobInstance]) -> int:
 class BatchValidationEngine:
     """Builds a :class:`ValidationPlan` per transitioner tick."""
 
-    def __init__(self, store: JobStore) -> None:
+    def __init__(self, store: JobStore, backend: str = "numpy") -> None:
         self.store = store
+        # "jax": homogeneous float tensor payload batches of fuzzy
+        # comparators route through the kernels/quorum_compare Pallas
+        # kernel (interpret mode on CPU); scalars/mixed payloads and every
+        # other comparator keep the pure-NumPy digest path
+        self.backend = backend
         self._digest_fns: Dict[str, Any] = {}
 
     def digest_fn(self, app: App):
         """Digest hook for ``app``'s comparator (cached), or None."""
         fn = self._digest_fns.get(app.name, _UNSET)
         if fn is _UNSET:
-            fn = self._digest_fns[app.name] = digest_batch_for(app.comparator)
+            fn = digest_batch_for(app.comparator)
+            if fn is not None and self.backend == "jax":
+                params = getattr(app.comparator, "fuzzy_params", None)
+                if params is not None:
+                    from .jax_backend import HAVE_JAX, fuzzy_digest_jax
+
+                    if HAVE_JAX:
+                        fn = fuzzy_digest_jax(fn, *params)
+            self._digest_fns[app.name] = fn
         return fn
 
     # ------------------------------------------------------------------

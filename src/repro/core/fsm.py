@@ -72,6 +72,10 @@ class Transitioner:
     instance: int = 0
     n_instances: int = 1
     batch_validate: bool = True
+    # execution backend handed to BatchValidationEngine ("numpy" | "jax");
+    # "jax" routes homogeneous tensor payload digests through the
+    # kernels/quorum_compare Pallas kernel
+    engine_backend: str = "numpy"
     # defense layer (§3.4): validation outcomes feed its agreement stats +
     # per-(host, version) quota table. Scalar path calls it inline; batch
     # path defers the identical (valid, invalid) pair lists through
@@ -109,7 +113,9 @@ class Transitioner:
             if self._engine is None:
                 from .batch_validate import BatchValidationEngine
 
-                self._engine = BatchValidationEngine(self.store)
+                self._engine = BatchValidationEngine(
+                    self.store, backend=self.engine_backend
+                )
             plan = self._engine.prepare(
                 pending, now, self.instance, self.n_instances,
                 clusters=self._sus_clusters,

@@ -43,6 +43,7 @@ from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from ..data import traces
+from . import jax_backend
 from .defense import DefensePolicy
 from .server import ProjectServer
 from .simulator import GridSimulation, HostSpec, SimMetrics, make_population
@@ -331,11 +332,14 @@ def _install_sybil(spec: ScenarioSpec, sim: GridSimulation, attacker: HostSpec) 
 # ---------------------------------------------------------------------------
 
 
-def build_server(spec: ScenarioSpec, batch_validate: bool) -> ProjectServer:
+def build_server(
+    spec: ScenarioSpec, batch_validate: bool, backend: str = "numpy"
+) -> ProjectServer:
     server = ProjectServer(
         name="p",
         purge_delay=1e18,
         batch_validate=batch_validate,
+        engine_backend=backend,
         defense_policy=spec.defense,
     )
     app = App(
@@ -376,14 +380,16 @@ def build(
     batch_validate: bool = True,
     vector_world: bool = True,
     epoch: float = 0.0,
+    backend: str = "numpy",
 ) -> Tuple[ProjectServer, GridSimulation, List[HostSpec]]:
     """Construct the (server, simulation) pair for one engine-axis setting,
     with job waves and Sybil arrivals installed as virtual-time callbacks."""
     reset_ids()
-    server = build_server(spec, batch_validate)
+    server = build_server(spec, batch_validate, backend=backend)
     pop = generate_population(spec)
     sim = GridSimulation(
-        server, pop, seed=spec.sim_seed, vector_world=vector_world, epoch=epoch
+        server, pop, seed=spec.sim_seed, vector_world=vector_world, epoch=epoch,
+        backend=backend,
     )
     per_wave = spec.n_jobs // spec.waves
 
@@ -563,8 +569,9 @@ def run_spec(
     batch_validate: bool = True,
     vector_world: bool = True,
     epoch: float = 0.0,
+    backend: str = "numpy",
 ) -> ScenarioResult:
-    server, sim, pop = build(spec, batch_validate, vector_world, epoch)
+    server, sim, pop = build(spec, batch_validate, vector_world, epoch, backend)
     m = sim.run(spec.horizon)
     sim.audit_validation()
     return ScenarioResult(spec=spec, server=server, sim=sim, metrics=m, population=pop)
@@ -592,7 +599,7 @@ def _first_divergence(a: Dict, b: Dict) -> Optional[str]:
 def assert_results_identical(
     a: ScenarioResult, b: ScenarioResult, what: str, job_states: bool = False
 ) -> None:
-    """3-axis parity contract. ``what`` names the engine axis under test
+    """4-axis parity contract. ``what`` names the engine axis under test
     (A = full engines, B = the oracle for that axis); on divergence the
     failure message pinpoints the first differing field/key/instance so
     the break is localizable without re-running the matrix."""
@@ -620,10 +627,14 @@ def assert_results_identical(
 
 
 def run_parity(spec: ScenarioSpec, epoch: float = 0.0) -> ScenarioResult:
-    """Run the scenario on all three engine axes and assert identity:
-    batch-validation engine vs scalar validation oracle (vector world on),
-    and vectorized world loop vs scalar event loop (batch validate on).
-    Returns the full-engine run for golden-bound assertions."""
+    """Run the scenario on all engine axes and assert identity: the
+    batch-validation engine vs the scalar validation oracle (vector world
+    on), the vectorized world loop vs the scalar event loop (batch
+    validate on), and — when jax is importable — the full engine stack on
+    the jax backend vs the NumPy engines (the 4th axis; the jax engines
+    are bit-identical, so the assertion is the same exact-equality check
+    as the other axes). Returns the full-engine run for golden-bound
+    assertions."""
     full = run_spec(spec, batch_validate=True, vector_world=True, epoch=epoch)
     oracle_v = run_spec(spec, batch_validate=False, vector_world=True, epoch=epoch)
     assert_results_identical(full, oracle_v, "validation engine vs scalar oracle")
@@ -631,4 +642,12 @@ def run_parity(spec: ScenarioSpec, epoch: float = 0.0) -> ScenarioResult:
     assert_results_identical(
         full, oracle_w, "vector world vs scalar event loop", job_states=True
     )
+    if jax_backend.HAVE_JAX:
+        jax_full = run_spec(
+            spec, batch_validate=True, vector_world=True, epoch=epoch,
+            backend="jax",
+        )
+        assert_results_identical(
+            full, jax_full, "jax backend vs numpy engines", job_states=True
+        )
     return full

@@ -284,6 +284,10 @@ class Scheduler:
     # scalar scan (tests/test_batch_dispatch.py); False keeps the scalar
     # O(slots²) reference path as the oracle.
     vector_dispatch: bool = False
+    # execution backend handed to BatchDispatchEngine ("numpy" | "jax");
+    # "jax" runs the dense mask/score passes as staged jits, bit-identical
+    # to the NumPy engine (4th parity axis in core/scenarios.run_parity)
+    engine_backend: str = "numpy"
     # defense layer (§3.4 work-spreading / HR census / host punishment);
     # enforced in the shared slow-check + dispatch choke points, so the
     # scalar and vectorized tails stay result-identical
@@ -303,9 +307,14 @@ class Scheduler:
 
         feeder = self.feeder
         engine = feeder._engine
-        if engine is None or engine.version != feeder.version:
+        if (
+            engine is None
+            or engine.version != feeder.version
+            or engine.backend != self.engine_backend
+        ):
             # the constructor stamps the snapshot with feeder.version
-            engine = BatchDispatchEngine(self.store, feeder)
+            engine = BatchDispatchEngine(self.store, feeder,
+                                         backend=self.engine_backend)
             feeder._engine = engine
         return engine
 
@@ -339,7 +348,8 @@ class Scheduler:
         if self.vector_dispatch:
             engine = self._persistent_engine()
             return [self._handle_one(req, now, engine=engine) for req in reqs]
-        engine = BatchDispatchEngine(self.store, self.feeder)
+        engine = BatchDispatchEngine(self.store, self.feeder,
+                                     backend=self.engine_backend)
         replies = [self._handle_one(req, now, engine=engine) for req in reqs]
         if self.feeder._engine is not None:
             self.feeder.invalidate()  # slot mutations bypassed the snapshot

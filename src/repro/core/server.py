@@ -60,6 +60,11 @@ class ProjectServer:
     # GridSimulation(vector_world=True) flips this on via
     # :meth:`set_vector_dispatch`.
     vector_dispatch: bool = False
+    # execution backend for the batch engines ("numpy" | "jax"), handed to
+    # every Scheduler (dispatch scoring) and Transitioner (validation
+    # digests); engine outputs are bit-identical either way (4th parity
+    # axis in core/scenarios.run_parity)
+    engine_backend: str = "numpy"
     # defense-in-depth replica placement (§3.4): work-spreading, HR census
     # pinning, host punishment. None disables the layer entirely.
     defense_policy: Optional[DefensePolicy] = None
@@ -93,6 +98,7 @@ class ProjectServer:
                 adaptive=self.adaptive,
                 seed=i,
                 vector_dispatch=self.vector_dispatch,
+                engine_backend=self.engine_backend,
                 defense=self.defense,
             )
             for i in range(self.n_scheduler_instances)
@@ -105,6 +111,7 @@ class ProjectServer:
                 instance=i,
                 n_instances=self.n_daemon_instances,
                 batch_validate=self.batch_validate,
+                engine_backend=self.engine_backend,
                 defense=self.defense,
             )
             for i in range(self.n_daemon_instances)

@@ -271,6 +271,7 @@ class GridSimulation:
         batch_clients: bool = True,
         vector_world: bool = True,
         epoch: float = 0.0,
+        backend: str = "numpy",
     ) -> None:
         self.server = server
         self.specs: Dict[int, HostSpec] = {s.host.id: s for s in population}
@@ -297,8 +298,13 @@ class GridSimulation:
         # event lands on the next multiple of ``epoch``. Applied in both
         # loops, so scalar-vs-vector parity holds at any epoch.
         self.epoch = epoch
-        self.client_engine = BatchClientEngine()
-        self.world = HostArrays()
+        # execution backend for the client/world batch engines ("numpy" |
+        # "jax"); engine outputs are bit-identical either way (4th parity
+        # axis in core/scenarios.run_parity). The server-side engines get
+        # their backend via ProjectServer(engine_backend=...).
+        self.backend = backend
+        self.client_engine = BatchClientEngine(backend=backend)
+        self.world = HostArrays(backend=backend)
         self.ground_truth = ground_truth or (lambda job_id: float(job_id) * 1.5)
         # real-compute hook (grid runtime): executor(job, host) -> output
         self.executor = executor

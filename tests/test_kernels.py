@@ -123,6 +123,43 @@ class TestQuorumCompare:
         assert not tree_quorum_agree(a, b)
         assert not tree_quorum_agree(a, {"w": jnp.ones((100, 7))})  # missing leaf
 
+    def test_transitioner_integration_tensor_payloads(self, monkeypatch):
+        """The kernel wired through the validator stack, not in isolation:
+        ``Transitioner(batch_validate=True, engine_backend="jax")`` on
+        tensor payloads routes the fuzzy digest through ``quorum_compare``
+        and must reach the same canonical choices, validate states, and
+        granted credit as the scalar comparator path."""
+        from repro.core import jax_backend
+        from test_batch_validate import build_pending, snapshot
+
+        calls = {"n": 0}
+        real = jax_backend.quorum_group_codes
+
+        def counting(*a, **kw):
+            calls["n"] += 1
+            return real(*a, **kw)
+
+        monkeypatch.setattr(jax_backend, "quorum_group_codes", counting)
+
+        sa, ta = build_pending(
+            payload="array", comparator="fuzzy", batch_validate=False,
+            bad_frac=0.3,
+        )
+        ta.tick(60.0)
+        snap_a = snapshot(sa, ta)
+
+        sb, tb = build_pending(
+            payload="array", comparator="fuzzy", batch_validate=True,
+            bad_frac=0.3,
+        )
+        tb.engine_backend = "jax"  # engine is built lazily on first tick
+        tb.tick(60.0)
+        snap_b = snapshot(sb, tb)
+
+        assert calls["n"] > 0  # the Pallas grouping actually ran
+        assert snap_a == snap_b
+        sb.check_invariants()
+
 
 class TestInt8Quant:
     @pytest.mark.parametrize("shape", [(100, 300), (17,), (4, 5, 6)])
