@@ -1,0 +1,197 @@
+"""RPC throughput + tail latency through the asyncio service layer (§5.1).
+
+The paper's scheduler is a CGI fleet behind a shared-memory job cache:
+many concurrent client RPCs, one cache, several scheduler instances.  This
+bench drives the :mod:`repro.service` TCP front with an async load
+generator simulating 10k (smoke/full) and 50k (full) concurrent volunteer
+clients, and compares:
+
+  baseline  — one scheduler instance, scalar dispatch, no coalescing: the
+              dispatcher answers each WORK frame with its own ``rpc`` call
+              (sequential per-request cache scans).
+  treatment — four shard-affine scheduler instances, vectorized dispatch,
+              wave coalescing: concurrent frames drain into ``rpc_batch``
+              waves, one batched engine pass per shard.
+
+Acceptance floor (CI-asserted in smoke mode): the multi-shard coalesced
+configuration must reach ≥3× the sequential single-instance RPC/s at 10k
+concurrent clients.  p50/p95/p99 reply latency and per-shard utilization
+rows are recorded alongside throughput.
+
+Smoke mode: ``python -m benchmarks.bench_rpc --smoke`` or
+``BENCH_RPC_SMOKE=1`` (skips the 50k-client full row).
+
+Results are written to ``benchmarks/BENCH_rpc.json`` (schema
+{schema, rows, acceptance}; path override ``BENCH_RPC_JSON_PATH``).
+"""
+from __future__ import annotations
+
+import asyncio
+import os
+import sys
+from typing import Optional, Tuple
+
+from .common import RESULTS, emit, write_bench_json
+
+from repro.core import (
+    App,
+    AppVersion,
+    Host,
+    Job,
+    Platform,
+    ProcessingResource,
+    ProjectServer,
+    ResourceType,
+    default_cpu_plan_class,
+    next_id,
+    reset_ids,
+)
+from repro.service import LoadReport, SchedulerService, run_load
+
+_OSES = ("windows", "mac", "linux")
+
+# The cache must be large enough that dispatch work (not event-loop churn)
+# dominates the RPC: the scalar oracle path costs O(cache²) Python per
+# request, which is exactly the §5.1 bottleneck coalescing removes.
+_CACHE = 384
+_HOSTS = 2048
+_JOBS = 20_000
+
+
+def _make_server(n_shards: int, vector: bool) -> ProjectServer:
+    """A single-app min_quorum=1 project with a pre-filled cache, so every
+    RPC is a live dispatch attempt (``make_project`` has no
+    ``n_scheduler_instances`` knob, hence the local maker)."""
+    reset_ids()
+    server = ProjectServer(
+        name="bench_rpc",
+        purge_delay=1e18,
+        cache_size=_CACHE,
+        n_scheduler_instances=n_shards,
+        vector_dispatch=vector,
+    )
+    app = App(name="work", min_quorum=1, init_ninstances=1)
+    for osn in _OSES:
+        app.add_version(
+            AppVersion(
+                id=next_id("appver"),
+                app_name="work",
+                platform=Platform(osn, "x86_64"),
+                version_num=1,
+                plan_class=default_cpu_plan_class(),
+            )
+        )
+    server.add_app(app)
+    for _ in range(_JOBS):
+        server.submit_job(
+            Job(id=next_id("job"), app_name="work", est_flop_count=1e12), 0.0
+        )
+    for i in range(_HOSTS):
+        server.add_host(
+            Host(
+                id=i + 1,
+                platforms=(Platform(_OSES[i % 3], "x86_64"),),
+                resources={
+                    ResourceType.CPU: ProcessingResource(ResourceType.CPU, 8, 2e10)
+                },
+                volunteer_id=i + 1,
+            )
+        )
+    server.tick(0.0)
+    return server
+
+
+async def _drive(
+    server: ProjectServer, coalesce: bool, n_clients: int
+) -> Tuple[LoadReport, dict]:
+    svc = SchedulerService(server, coalesce=coalesce, max_batch=1024)
+    await svc.start()
+    try:
+        report = await run_load(
+            "127.0.0.1", svc.port, n_clients=n_clients, n_conns=64
+        )
+    finally:
+        await svc.stop()
+    return report, svc.stats()
+
+
+def _measure(n_shards: int, vector: bool, coalesce: bool, n_clients: int):
+    server = _make_server(n_shards, vector)
+    return asyncio.run(_drive(server, coalesce, n_clients))
+
+
+def _emit_row(label: str, report: LoadReport, stats: dict) -> None:
+    emit(
+        f"rpc_{label}",
+        1e6 / max(report.rpcs_per_s, 1e-9),
+        f"rpcs_per_s={report.rpcs_per_s:.0f};p50_ms={report.p50_ms:.1f}"
+        f";p95_ms={report.p95_ms:.1f};p99_ms={report.p99_ms:.1f}"
+        f";errors={report.errors};max_wave={stats['max_wave']}",
+    )
+    for row in stats.get("shards", []):
+        emit(
+            f"rpc_{label}_shard{row['shard']}",
+            0.0,
+            f"requests={row['requests']};dispatched={row['dispatched']}"
+            f";owned_slots={row['owned_slots']}"
+            f";migrations_in={row['migrations_in']}",
+        )
+
+
+def run() -> None:
+    start_row = len(RESULTS)
+    smoke = "--smoke" in sys.argv or bool(os.environ.get("BENCH_RPC_SMOKE"))
+    n_clients = 10_000  # the acceptance criterion is pinned at 10k clients
+    floor = 3.0
+
+    base_report, base_stats = _measure(
+        n_shards=1, vector=False, coalesce=False, n_clients=n_clients
+    )
+    _emit_row(f"sequential_1shard_{n_clients}c", base_report, base_stats)
+
+    treat_report, treat_stats = _measure(
+        n_shards=4, vector=True, coalesce=True, n_clients=n_clients
+    )
+    _emit_row(f"coalesced_4shard_{n_clients}c", treat_report, treat_stats)
+
+    speedup: Optional[float] = (
+        treat_report.rpcs_per_s / base_report.rpcs_per_s
+        if base_report.rpcs_per_s > 0
+        else None
+    )
+    emit(
+        f"rpc_speedup_{n_clients}c",
+        0.0,
+        f"speedup={speedup:.1f}x;floor={floor:.0f}x;pass={speedup >= floor}",
+    )
+
+    if not smoke:
+        big_report, big_stats = _measure(
+            n_shards=4, vector=True, coalesce=True, n_clients=50_000
+        )
+        _emit_row("coalesced_4shard_50000c", big_report, big_stats)
+
+    acceptance = {
+        "metric": f"coalesced 4-shard vs sequential RPC/s at {n_clients} clients",
+        "floor": floor,
+        "measured": speedup,
+        "pass": (speedup or 0.0) >= floor,
+        "smoke": smoke,
+    }
+    run.acceptance = acceptance  # picked up by benchmarks.run and CI
+    write_bench_json(
+        path=os.environ.get(
+            "BENCH_RPC_JSON_PATH",
+            os.path.join(os.path.dirname(__file__), "BENCH_rpc.json"),
+        ),
+        rows=RESULTS[start_row:],
+        extra={"acceptance": acceptance},
+    )
+    if smoke and not acceptance["pass"]:
+        raise SystemExit(
+            f"bench_rpc smoke floor failed: {speedup:.1f}x < {floor:.0f}x"
+        )
+
+
+if __name__ == "__main__":
+    run()

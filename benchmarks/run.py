@@ -4,6 +4,8 @@ Prints ``name,us_per_call,derived`` CSV (one line per measurement). Claims
 and their paper sections:
 
   bench_dispatch    S5.1/[17]  hundreds of dispatches per second; fast batch submit
+  bench_rpc         S5.1       asyncio service front: coalesced sharded RPC
+                               waves vs sequential single-instance dispatch
   bench_daemons     S5.1       indexed store: O(dirty) daemon passes at 1M-job backlogs
   bench_world       S9         columnar world + vectorized event loop vs the
                                per-event scalar simulator at 1k-100k hosts
@@ -44,6 +46,7 @@ def main() -> None:
         bench_grid_train,
         bench_jax,
         bench_kernels,
+        bench_rpc,
         bench_scenarios,
         bench_scheduling,
         bench_validation,
@@ -56,6 +59,7 @@ def main() -> None:
     failures = 0
     for mod in (
         bench_dispatch,
+        bench_rpc,
         bench_daemons,
         bench_world,
         bench_clients,

@@ -14,6 +14,7 @@ Layout (paper section in parens):
   allocation   — linear-bounded allocation model (§3.9)
   defense      — work-spreading / HR census / host punishment (§3.4)
   scheduler    — feeder, job cache, dispatch policy (§5.1, §6.4)
+  shard        — host→shard affinity, cache-slot ownership, migration (§5.1)
   batch_dispatch — vectorized slots×hosts batch scoring engine (§5.1, §6.4)
   client       — WRR/EDF resource scheduling + work fetch (§6.1–6.2)
   batch_client — vectorized host-population client engine (§6.1–6.2, §9)
@@ -57,6 +58,7 @@ from .scenarios import (
     sybil_identity_ids,
 )
 from .server import ProjectServer
+from .shard import ShardMap, ShardPolicy, ShardStats
 from .simulator import GridSimulation, HostSpec, make_population
 from .world import ExpDrawCache, HostArrays
 from .store import JobStore

@@ -84,9 +84,19 @@ class BatchDispatchEngine:
     """
 
     def __init__(self, store: JobStore, feeder: Feeder,
-                 backend: str = "numpy") -> None:
+                 backend: str = "numpy",
+                 shard_map=None, shard: Optional[int] = None) -> None:
         self.store = store
         self.feeder = feeder
+        # federated dispatch (core/shard.py): when given, the snapshot only
+        # materializes the cache positions ``shard`` owns — the validity
+        # mask, the per-job slot lists and the skip bookkeeping all become
+        # slice-local, mirroring the scalar scan's ownership filter. Array
+        # length stays the full cache size so the rotated-scan index
+        # arithmetic (and the scheduler's RNG draw over ``engine.n``) is
+        # unchanged.
+        self.shard_map = shard_map
+        self.shard = shard
         # execution backend for the dense mask/score passes; "jax" routes
         # them through core.jax_backend's staged jits (bit-identical to
         # the NumPy path — 4th parity axis), sparse tails stay host-side
@@ -132,8 +142,11 @@ class BatchDispatchEngine:
         # (taken slots included: the scalar skip lookup counts them, §6.4)
         self._job_slots: Dict[int, List[int]] = {}
 
+        owner = shard_map.owner if shard_map is not None else None
         for i, slot in enumerate(slots):
             if slot is None:
+                continue
+            if owner is not None and owner[i] != shard:
                 continue
             job = store.jobs.get(slot.job_id)
             if job is None:
@@ -487,11 +500,30 @@ class BatchDispatchEngine:
                     self.skips[q] = first.skipped if first else 0.0
                     self.job_nslots[q] = len(positions)
                 self.skip_first[positions[0]] = True
-        app = self.store.apps[job.app_name]
+        self.apply_job_locks(job)
+        # HR-class / homogeneous-version locks are *job*-level state checked
+        # at score time, so a dispatch on this shard must also propagate
+        # them into every sibling shard's live snapshot — a stale sibling
+        # mask could otherwise send the job outside its locked class before
+        # the next cache-generation rebuild.
+        if self.shard_map is not None:
+            for sib in self.feeder._engines.values():
+                if sib is not self and sib.version == self.version:
+                    sib.apply_job_locks(job)
+
+    def apply_job_locks(self, job: Job) -> None:
+        """Fold ``job``'s HR-class / homogeneous-app-version locks into this
+        snapshot's mask arrays (for the job's slots this snapshot holds)."""
+        positions = self._job_slots.get(job.id)
+        if not positions:
+            return
+        app = self.store.apps.get(job.app_name)
+        if app is None:
+            return
         if app.hr_level != HRLevel.NONE and job.hr_class is not None:
             hid = self._intern_hr(job.hr_class)
-            for q in self._job_slots.get(job.id, ()):
+            for q in positions:
                 self.hr_id[q] = hid
         if job.hav_version_id is not None:
-            for q in self._job_slots.get(job.id, ()):
+            for q in positions:
                 self.hav[q] = job.hav_version_id

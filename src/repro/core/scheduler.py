@@ -34,6 +34,7 @@ from .allocation import LinearBoundedAllocator
 from .defense import DefenseLayer
 from .estimation import RuntimeEstimator
 from .keywords import KeywordPrefs, keyword_score
+from .shard import ShardMap
 from .store import JobStore
 from .types import (
     App,
@@ -165,10 +166,13 @@ class Feeder:
     # tail (a fill, or an explicit invalidate). Dispatch-tail mutations are
     # reported to the engine as events instead, so they do not invalidate.
     version: int = 0
-    # persistent BatchDispatchEngine snapshot (built lazily by the
-    # scheduler's vector-dispatch path; shared by all scheduler instances
-    # because they share this cache)
-    _engine: Optional[object] = field(default=None, repr=False)
+    # persistent BatchDispatchEngine snapshots (built lazily by the
+    # scheduler's vector-dispatch path), keyed by shard: ``None`` for the
+    # unsharded shared-cache snapshot, shard index for the per-shard cache
+    # slices of the federated dispatch path (core/shard.py). All snapshots
+    # share this cache's generation counter, so one ``invalidate`` rebuilds
+    # every shard's slice.
+    _engines: Dict[Optional[int], object] = field(default_factory=dict, repr=False)
 
     def __post_init__(self) -> None:
         if not self.slots:
@@ -292,6 +296,13 @@ class Scheduler:
     # enforced in the shared slow-check + dispatch choke points, so the
     # scalar and vectorized tails stay result-identical
     defense: Optional["DefenseLayer"] = None
+    # federated dispatch (core/shard.py): when set, this instance serves
+    # only hosts whose affinity maps to ``shard`` and scans only the cache
+    # positions that shard owns — the scalar scan and the engine snapshot
+    # are both restricted to the slice, keeping them bit-identical to each
+    # other. None = the classic shared-cache instance (full scan).
+    shard_map: Optional[ShardMap] = None
+    shard: int = 0
     metrics: SchedulerMetrics = field(default_factory=SchedulerMetrics)
     _rng: random.Random = field(default=None, repr=False)  # type: ignore[assignment]
 
@@ -306,7 +317,8 @@ class Scheduler:
         from .batch_dispatch import BatchDispatchEngine  # deferred: avoids cycle
 
         feeder = self.feeder
-        engine = feeder._engine
+        key = self.shard if self.shard_map is not None else None
+        engine = feeder._engines.get(key)
         if (
             engine is None
             or engine.version != feeder.version
@@ -314,8 +326,10 @@ class Scheduler:
         ):
             # the constructor stamps the snapshot with feeder.version
             engine = BatchDispatchEngine(self.store, feeder,
-                                         backend=self.engine_backend)
-            feeder._engine = engine
+                                         backend=self.engine_backend,
+                                         shard_map=self.shard_map,
+                                         shard=key)
+            feeder._engines[key] = engine
         return engine
 
     def handle_request(self, req: ScheduleRequest, now: float) -> ScheduleReply:
@@ -324,7 +338,7 @@ class Scheduler:
         reply = self._handle_one(req, now, engine=None)
         # scalar dispatch mutates slots without emitting engine events: any
         # persistent snapshot other schedulers hold is now stale
-        if self.feeder._engine is not None:
+        if self.feeder._engines:
             self.feeder.invalidate()
         return reply
 
@@ -349,9 +363,11 @@ class Scheduler:
             engine = self._persistent_engine()
             return [self._handle_one(req, now, engine=engine) for req in reqs]
         engine = BatchDispatchEngine(self.store, self.feeder,
-                                     backend=self.engine_backend)
+                                     backend=self.engine_backend,
+                                     shard_map=self.shard_map,
+                                     shard=self.shard if self.shard_map is not None else None)
         replies = [self._handle_one(req, now, engine=engine) for req in reqs]
-        if self.feeder._engine is not None:
+        if self.feeder._engines:
             self.feeder.invalidate()  # slot mutations bypassed the snapshot
         return replies
 
@@ -620,14 +636,23 @@ class Scheduler:
     def _candidate_list(
         self, host: Host, req: ScheduleRequest, rtype: ResourceType, now: float
     ) -> List[Candidate]:
-        """Scan the job cache from a random start; score candidates (§6.4)."""
+        """Scan the job cache from a random start; score candidates (§6.4).
+
+        Under federated dispatch the scan is restricted to the cache
+        positions this scheduler's shard owns — the same rotated visiting
+        order over a masked slice, mirroring the engine snapshot's
+        build-time ownership mask."""
         slots = self.feeder.slots
         n = len(slots)
         start = self._rng.randrange(n) if n else 0
+        owner = self.shard_map.owner if self.shard_map is not None else None
         out: List[Candidate] = []
         seen_jobs = set()
         for k in range(n):
-            slot = slots[(start + k) % n]
+            idx = (start + k) % n
+            if owner is not None and owner[idx] != self.shard:
+                continue
+            slot = slots[idx]
             if slot is None or slot.taken:
                 continue
             job = self.store.jobs.get(slot.job_id)
@@ -706,12 +731,23 @@ class Scheduler:
         if self.allocator is not None:
             score += W_BALANCE * self.allocator.priority(job.submitter, now)
         score += W_PRIORITY * job.priority
-        # skipped-before boost: hard-to-send jobs go while they can (§6.4)
+        # skipped-before boost: hard-to-send jobs go while they can (§6.4).
+        # Under federated dispatch the lookup is slice-local (first owned
+        # slot of the job) — skip counts are per-shard state, matching the
+        # engine snapshot's slice-local ``skips`` array.
         slot_skips = 0
-        for s in self.feeder.slots:
-            if s is not None and s.job_id == job.id:
-                slot_skips = s.skipped
-                break
+        slots = self.feeder.slots
+        if self.shard_map is None:
+            for s in slots:
+                if s is not None and s.job_id == job.id:
+                    slot_skips = s.skipped
+                    break
+        else:
+            for p in self.shard_map.owned_positions(self.shard):
+                s = slots[p]
+                if s is not None and s.job_id == job.id:
+                    slot_skips = s.skipped
+                    break
         score += W_SKIPPED * min(slot_skips, 5)
         # locality scheduling (§3.5): prefer jobs whose files are resident
         if app.uses_locality and job.input_files:

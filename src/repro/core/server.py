@@ -21,6 +21,7 @@ from .defense import DefenseLayer, DefensePolicy
 from .estimation import RuntimeEstimator
 from .fsm import Transitioner
 from .scheduler import Feeder, Scheduler, ScheduleReply, ScheduleRequest, TrickleUp
+from .shard import ShardMap, ShardPolicy
 from .store import JobStore
 from .types import App, AppVersion, Batch, Host, Job, next_id
 
@@ -69,6 +70,18 @@ class ProjectServer:
     # pinning, host punishment. None disables the layer entirely.
     defense_policy: Optional[DefensePolicy] = None
     defense: Optional[DefenseLayer] = None
+    # shard-aware federated dispatch (§5.1 scale-out, core/shard.py): with
+    # several scheduler instances, partition hosts across them by a stable
+    # host→shard affinity and give each shard its own slice of the feeder
+    # cache, so rpc_batch runs one vectorized handle_batch pass per shard.
+    # None = auto (sharding on exactly when n_scheduler_instances > 1);
+    # False keeps the legacy sequential round-robin fallback — the
+    # unsharded oracle the parity tests compare against.
+    sharded_dispatch: Optional[bool] = None
+    # pinned host_id→shard overrides (default affinity: host_id % n_shards)
+    shard_affinity: Optional[Dict[int, int]] = None
+    shard_policy: Optional[ShardPolicy] = None
+    shard_map: Optional[ShardMap] = None
     purge_delay: float = 0.0  # keep completed rows briefly (§4)
     enabled: DaemonControl = field(default_factory=DaemonControl)
     assimilators: Dict[str, AssimilatorFn] = field(default_factory=dict)
@@ -89,6 +102,16 @@ class ProjectServer:
             # dispatch snapshot's back; bump the cache generation so the
             # vectorized path re-reads the pins (scalar-parity requirement)
             self.defense.invalidate_dispatch = self.feeder.invalidate
+        sharded = self.sharded_dispatch
+        if sharded is None:
+            sharded = self.n_scheduler_instances > 1
+        if sharded and self.n_scheduler_instances > 1 and self.shard_map is None:
+            self.shard_map = ShardMap(
+                n_shards=self.n_scheduler_instances,
+                cache_size=self.cache_size,
+                affinity=self.shard_affinity,
+                policy=self.shard_policy or ShardPolicy(),
+            )
         self.schedulers = [
             Scheduler(
                 store=self.store,
@@ -100,6 +123,8 @@ class ProjectServer:
                 vector_dispatch=self.vector_dispatch,
                 engine_backend=self.engine_backend,
                 defense=self.defense,
+                shard_map=self.shard_map,
+                shard=i,
             )
             for i in range(self.n_scheduler_instances)
         ]
@@ -170,6 +195,15 @@ class ProjectServer:
 
     def rpc(self, request: ScheduleRequest, now: float) -> ScheduleReply:
         self._handle_trickles(request, now)
+        if self.shard_map is not None:
+            # federated dispatch: stable host→shard affinity replaces the
+            # round-robin rotation, so a host always hits the same shard's
+            # cache slice (and the same scheduler RNG stream)
+            shard = self.shard_map.shard_of(request.host_id)
+            self.shard_map.rebalance(self.feeder, shard)
+            reply = self.schedulers[shard].handle_request(request, now)
+            self.shard_map.note(shard, requests=1, dispatched=len(reply.jobs))
+            return reply
         sched = self.schedulers[self._rr % len(self.schedulers)]
         self._rr += 1
         return sched.handle_request(request, now)
@@ -180,14 +214,26 @@ class ProjectServer:
         One scheduler instance serves the whole batch through
         ``Scheduler.handle_batch`` (the shared-memory cache is snapshotted
         into struct-of-arrays form once and scored vectorized per host),
-        result-identical to calling :meth:`rpc` per request in order. With
-        multiple scheduler instances the sequential path round-robins
-        requests across distinct RNG streams, so batching would change
-        assignments — fall back to per-request dispatch to keep the
-        identity.
+        result-identical to calling :meth:`rpc` per request in order.
+
+        With multiple scheduler instances and federated dispatch active
+        (``shard_map``), the batch is grouped by host→shard affinity and
+        served as one vectorized ``handle_batch`` pass *per shard* in
+        ascending shard order (requests keep their arrival order within a
+        shard; replies are scattered back to arrival positions). Each
+        request is result-identical to routing it through :meth:`rpc` under
+        the same affinity; the shard-parity contract (union of per-shard
+        assignments == sequential affinity-routed dispatch) is pinned by
+        tests/test_shard_dispatch.py. With sharding opted out
+        (``sharded_dispatch=False``) the legacy behavior remains: the
+        sequential path round-robins requests across distinct RNG streams,
+        so batching would change assignments — fall back to per-request
+        dispatch to keep the identity.
         """
         if len(self.schedulers) > 1:
-            return [self.rpc(r, now) for r in requests]
+            if self.shard_map is None:
+                return [self.rpc(r, now) for r in requests]
+            return self._rpc_batch_sharded(requests, now)
         for request in requests:
             self._handle_trickles(request, now)
         if not requests:
@@ -200,6 +246,39 @@ class ProjectServer:
         # identical to unbatched use regardless of the estimate's accuracy
         self.adaptive.prefetch_draws(len(requests))
         return sched.handle_batch(requests, now)
+
+    def _rpc_batch_sharded(
+        self, requests: List[ScheduleRequest], now: float
+    ) -> List[ScheduleReply]:
+        """Federated coalesced dispatch: one vectorized ``handle_batch``
+        pass per shard (ascending shard order, arrival order within each
+        shard), after a work-migration check per participating shard.
+        Trickles are handled up front for the whole batch, like the
+        single-instance coalesced path."""
+        for request in requests:
+            self._handle_trickles(request, now)
+        if not requests:
+            return []
+        assert self.shard_map is not None
+        groups: Dict[int, List[int]] = {}
+        for i, r in enumerate(requests):
+            groups.setdefault(self.shard_map.shard_of(r.host_id), []).append(i)
+        replies: List[Optional[ScheduleReply]] = [None] * len(requests)
+        for s in sorted(groups):
+            idxs = groups[s]
+            # starved-shard migration before the pass, so a drained slice
+            # can steal neighbors' cached slots instead of replying empty
+            self.shard_map.rebalance(self.feeder, s)
+            # one prefetched adaptive-RNG batch per shard pass (same FIFO
+            # stream-order guarantee as the single-instance coalesced path)
+            self.adaptive.prefetch_draws(len(idxs))
+            out = self.schedulers[s].handle_batch([requests[i] for i in idxs], now)
+            dispatched = 0
+            for i, reply in zip(idxs, out):
+                replies[i] = reply
+                dispatched += len(reply.jobs)
+            self.shard_map.note(s, requests=len(idxs), dispatched=dispatched)
+        return replies  # type: ignore[return-value]
 
     def _handle_trickles(self, request: ScheduleRequest, now: float) -> None:
         """Trickle-up messages are 'conveyed immediately to the server and
@@ -270,8 +349,11 @@ class ProjectServer:
     def delete_files(self, now: float) -> int:
         n = 0
         for job in self.store.pending_file_deletion():
-            # retain canonical output until all instances resolved (§4);
-            # jobs that fail this check simply stay in the pending queue
+            # retain canonical output until all instances resolved (§4).
+            # The indexed store already defers blocked jobs to their
+            # instance-terminal events (store.delete_ready), so this check
+            # is a cheap defense there and the actual filter only on the
+            # use_indexes=False oracle path.
             if any(i.is_outstanding() for i in self.store.job_instances(job.id)):
                 continue
             job.files_deleted = True
@@ -292,6 +374,8 @@ class ProjectServer:
         self.adaptive.forget_host(host_id)
         if self.defense is not None:
             self.defense.forget_host(host_id)
+        if self.shard_map is not None:
+            self.shard_map.forget_host(host_id)
 
     def set_vector_dispatch(self, flag: bool) -> None:
         """Flip the persistent-snapshot dispatch path on every scheduler

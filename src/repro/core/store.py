@@ -22,7 +22,10 @@ notify the store on field assignment, see ``types.IndexObserved``):
     one-instance-per-volunteer "slow check" (§6.4) O(1);
   * per-batch open-job counters replacing the all-jobs ``batch_done`` scan;
   * a validation-pending set — jobs holding a fresh (OVER/SUCCESS/INIT)
-    instance — consumed by the batch validation engine's digest pass.
+    instance — consumed by the batch validation engine's digest pass;
+  * a file-deletion readiness set — delete-pending jobs with zero
+    outstanding instances (per-job counts maintained on instance state
+    transitions), so the deleter never re-scans blocked jobs per tick.
 
 The original scan queries (``jobs_with_flag`` & co.) are kept as the
 debug/oracle path: ``use_indexes=False`` routes every daemon query through
@@ -112,6 +115,15 @@ class JobStore:
     # counts below on every tracked-field assignment.
     validation_pending: Set[int] = field(default_factory=set)
     _fresh_success: Dict[int, int] = field(default_factory=dict)
+    # file-deletion readiness (§4): the deleter must retain a job's files
+    # while any instance is outstanding (UNSENT / IN_PROGRESS). Rather than
+    # re-scanning every delete-pending job's instances each tick, the store
+    # keeps a per-job outstanding-instance count (maintained on instance
+    # state transitions) and promotes a job into ``delete_ready`` the
+    # moment its count hits zero — i.e. the re-check is deferred to
+    # instance-*terminal* events.
+    delete_ready: Set[int] = field(default_factory=set)
+    _job_outstanding: Dict[int, int] = field(default_factory=dict)
 
     def __post_init__(self) -> None:
         for s in JobState:
@@ -170,6 +182,7 @@ class JobStore:
         self.instances[inst.id] = inst
         self._by_job[job.id].append(inst.id)
         self._insts_by_state[inst.state].add(inst.id)
+        self._outstanding_delta(job.id, 1)  # new instances start UNSENT
         self._unsent.setdefault(job.app_name, deque()).append(inst.id)
         self._unsent_ids.setdefault(job.app_name, set()).add(inst.id)
         object.__setattr__(inst, "_store", self)
@@ -340,7 +353,15 @@ class JobStore:
         return [self.jobs[j] for j in sorted(source)]
 
     def pending_file_deletion(self) -> List[Job]:
-        source = self.delete_pending if self.use_indexes else (
+        """Delete-pending jobs that are *ready* — no outstanding (UNSENT /
+        IN_PROGRESS) instance. The indexed path reads ``delete_ready``, so
+        jobs blocked on a straggler instance cost nothing per tick: their
+        re-check is deferred to the instance-terminal event that drops the
+        outstanding count to zero. The oracle path keeps the original scan
+        over all delete-pending jobs — the deleter daemon re-applies the
+        outstanding check itself, so both paths converge on the same jobs.
+        """
+        source = self.delete_ready if self.use_indexes else (
             j.id for j in self.jobs_to_delete_files()
         )
         return [self.jobs[j] for j in sorted(source)]
@@ -477,6 +498,8 @@ class JobStore:
         self._job_vols.pop(jid, None)
         self._fresh_success.pop(jid, None)
         self.validation_pending.discard(jid)
+        self._job_outstanding.pop(jid, None)
+        self.delete_ready.discard(jid)
         job.state = JobState.PURGED
         self.jobs.pop(jid, None)
         self._jobs_by_state[JobState.PURGED].discard(jid)
@@ -539,9 +562,11 @@ class JobStore:
             self.assimilate_pending, jid,
             job.state in _TERMINAL and not job.assimilated,
         )
+        delete_pending = job.assimilated and not job.files_deleted
+        _set_membership(self.delete_pending, jid, delete_pending)
         _set_membership(
-            self.delete_pending, jid,
-            job.assimilated and not job.files_deleted,
+            self.delete_ready, jid,
+            delete_pending and self._job_outstanding.get(jid, 0) == 0,
         )
         want_purge = job.assimilated and job.files_deleted and job.state != JobState.PURGED
         if want_purge and jid not in self.purge_pending:
@@ -584,6 +609,10 @@ class JobStore:
         if name == "state":
             self._insts_by_state[old].discard(inst.id)
             self._insts_by_state[new].add(inst.id)
+            was_out = old in (InstanceState.UNSENT, InstanceState.IN_PROGRESS)
+            now_out = new in (InstanceState.UNSENT, InstanceState.IN_PROGRESS)
+            if was_out != now_out:
+                self._outstanding_delta(inst.job_id, 1 if now_out else -1)
             if new == InstanceState.IN_PROGRESS and inst.deadline > 0:
                 heapq.heappush(self._deadline_heap, (inst.deadline, inst.id))
             elif new == InstanceState.UNSENT:
@@ -669,6 +698,18 @@ class JobStore:
                     deltas[jid] = deltas.get(jid, 0) + (1 if to_init else -1)
         for jid, delta in deltas.items():
             self._fresh_delta(jid, delta)
+
+    def _outstanding_delta(self, job_id: int, delta: int) -> None:
+        """Maintain the per-job outstanding-instance count and, for
+        delete-pending jobs, the readiness set — the instance-terminal
+        event that replaces the deleter's per-tick re-scan."""
+        c = self._job_outstanding.get(job_id, 0) + delta
+        if c <= 0:
+            self._job_outstanding.pop(job_id, None)
+        else:
+            self._job_outstanding[job_id] = c
+        if job_id in self.delete_pending:
+            _set_membership(self.delete_ready, job_id, c <= 0)
 
     def _fresh_delta(self, job_id: int, delta: int) -> None:
         c = self._fresh_success.get(job_id, 0) + delta
@@ -780,6 +821,25 @@ class JobStore:
                 "validation_pending diverged: "
                 f"extra={sorted(self.validation_pending - set(expect_fresh))[:5]} "
                 f"missing={sorted(set(expect_fresh) - self.validation_pending)[:5]}"
+            )
+
+        expect_out: Dict[int, int] = {}
+        for i in self.instances.values():
+            if i.state in (InstanceState.UNSENT, InstanceState.IN_PROGRESS):
+                expect_out[i.job_id] = expect_out.get(i.job_id, 0) + 1
+        if self._job_outstanding != expect_out:
+            diff = set(self._job_outstanding.items()) ^ set(expect_out.items())
+            problems.append(f"outstanding-instance counts diverged: {sorted(diff)[:5]}")
+        expect_ready = {
+            j.id
+            for j in self.jobs_to_delete_files()
+            if not any(i.is_outstanding() for i in self.job_instances(j.id))
+        }
+        if self.delete_ready != expect_ready:
+            problems.append(
+                "delete_ready diverged: "
+                f"extra={sorted(self.delete_ready - expect_ready)[:5]} "
+                f"missing={sorted(expect_ready - self.delete_ready)[:5]}"
             )
 
         expect_hosts: Dict[int, Set[int]] = {}

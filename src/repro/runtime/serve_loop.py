@@ -9,6 +9,7 @@ validation spot-checks can be layered via the grid runtime if desired).
 """
 from __future__ import annotations
 
+import heapq
 import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
@@ -51,6 +52,30 @@ class ServeMetrics:
         return self.total_latency / self.requests_done if self.requests_done else 0.0
 
 
+class AdmissionQueue:
+    """EDF priority queue for admission (§10.7).
+
+    A binary heap keyed ``(deadline, seq)``: ``pop`` is the
+    earliest-deadline request, and the monotone submission sequence breaks
+    deadline ties FIFO — the same order the old ``list.sort`` (stable) +
+    ``pop(0)`` produced, at O(log n) per operation instead of an O(n log n)
+    re-sort on every admission pass."""
+
+    def __init__(self) -> None:
+        self._heap: List[Tuple[float, int, Request]] = []
+        self._seq = 0
+
+    def push(self, req: Request) -> None:
+        heapq.heappush(self._heap, (req.deadline, self._seq, req))
+        self._seq += 1
+
+    def pop(self) -> Request:
+        return heapq.heappop(self._heap)[2]
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+
 class BatchServer:
     """Slot-based continuous batching with a fixed decode batch."""
 
@@ -68,11 +93,11 @@ class BatchServer:
         self.max_seq = max_seq
         self._decode = jax.jit(make_decode_step(cfg), donate_argnums=(2,))
         self._prefill_cache: Dict[int, Any] = {}
-        self.queue: List[Request] = []
+        self.queue = AdmissionQueue()
         self.metrics = ServeMetrics()
 
     def submit(self, req: Request) -> None:
-        self.queue.append(req)
+        self.queue.push(req)
 
     # -- single-sequence prefill into a slot cache, then batched decode --
 
@@ -87,10 +112,9 @@ class BatchServer:
 
         def admit() -> None:
             # EDF: earliest-deadline-first admission (§10.7)
-            self.queue.sort(key=lambda r: r.deadline)
             for i in range(self.slots):
                 if active[i] is None and self.queue:
-                    req = self.queue.pop(0)
+                    req = self.queue.pop()
                     req.started_at = time.time()
                     # per-slot prefill (batch=1) then merge into the batch cache
                     s = len(req.prompt)
@@ -99,9 +123,8 @@ class BatchServer:
                     logits, one = prefill(self.params, {"tokens": toks}, one)
                     nxt = int(jnp.argmax(logits[0, -1, : self.cfg.vocab]))
                     req.tokens_out.append(nxt)
-                    cache_np = jax.tree_util.tree_map(np.asarray, one)
                     nonlocal cache
-                    cache = _merge_slot(cache, cache_np, i)
+                    cache = _merge_slot(cache, one, i)
                     active[i] = req
                     lengths[i] = s
 
@@ -146,18 +169,18 @@ def _merge_slot(batch_cache: Any, one_cache: Any, slot: int) -> Any:
     Cache layouts put batch right after the stacked layer axes; SSM leaves
     are (L, B, ...) and attention leaves (L, B, S, ...), hybrid adds a
     groups axis — in all cases the batch axis is the first axis whose size
-    differs between the two trees."""
+    differs between the two trees.
+
+    ``dynamic_update_slice_in_dim`` writes only the target slot on-device;
+    no leaf is ever pulled to the host, so the merge stays traceable (it
+    works under ``jax.jit``) and never round-trips the full cache."""
 
     def one(bc, oc):
-        bc = np.asarray(bc)
-        oc = np.asarray(oc)
+        bc = jnp.asarray(bc)
+        oc = jnp.asarray(oc)
         for ax in range(bc.ndim):
             if bc.shape[ax] != oc.shape[ax]:
-                idx = [slice(None)] * bc.ndim
-                idx[ax] = slice(slot, slot + 1)
-                bc = bc.copy()
-                bc[tuple(idx)] = oc
-                return jnp.asarray(bc)
-        return jnp.asarray(bc)  # identical shapes (shouldn't happen for B>1)
+                return jax.lax.dynamic_update_slice_in_dim(bc, oc, slot, axis=ax)
+        return bc  # identical shapes (shouldn't happen for B>1)
 
     return jax.tree_util.tree_map(one, batch_cache, one_cache)

@@ -1,0 +1,51 @@
+"""Asyncio service surface for the project server (§5.1).
+
+The core engines are synchronous and virtual-time; this package puts a
+network front on them without perturbing their determinism:
+
+  protocol — newline-delimited wire codec (requests, replies, error frames)
+  server   — asyncio TCP service coalescing concurrent RPCs into per-shard
+             ``rpc_batch`` waves
+  loadgen  — async load generator (10k–100k simulated clients) recording
+             RPC/s and tail latency for BENCH_rpc.json
+"""
+from .loadgen import LoadReport, run_load
+from .protocol import (
+    MAX_LINE,
+    ErrorReply,
+    JobOffer,
+    PingRequest,
+    PongReply,
+    ProtocolError,
+    StatsReply,
+    StatsRequest,
+    WorkReply,
+    WorkRequest,
+    decode_reply,
+    decode_request,
+    encode_reply,
+    encode_request,
+    reply_to_wire,
+)
+from .server import SchedulerService
+
+__all__ = [
+    "ErrorReply",
+    "JobOffer",
+    "LoadReport",
+    "MAX_LINE",
+    "PingRequest",
+    "PongReply",
+    "ProtocolError",
+    "SchedulerService",
+    "StatsReply",
+    "StatsRequest",
+    "WorkReply",
+    "WorkRequest",
+    "decode_reply",
+    "decode_request",
+    "encode_reply",
+    "encode_request",
+    "reply_to_wire",
+    "run_load",
+]

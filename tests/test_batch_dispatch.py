@@ -439,12 +439,16 @@ def test_server_rpc_batch_matches_sequential_rpc():
 
 
 def test_rpc_batch_multi_scheduler_falls_back_to_sequential():
-    """With >1 scheduler instance the sequential path round-robins across
-    distinct RNG streams; rpc_batch must preserve that identity by falling
-    back to per-request dispatch."""
+    """With >1 scheduler instance and sharded dispatch opted out, the
+    sequential path round-robins across distinct RNG streams; rpc_batch must
+    preserve that identity by falling back to per-request dispatch.  (With
+    sharding enabled — the default for multi-instance servers — rpc_batch
+    instead routes by host affinity; see tests/test_shard_dispatch.py.)"""
     def build():
         reset_ids()
-        server = ProjectServer(name="p", cache_size=32, n_scheduler_instances=3)
+        server = ProjectServer(
+            name="p", cache_size=32, n_scheduler_instances=3, sharded_dispatch=False
+        )
         app = App(name="a", min_quorum=1, init_ninstances=1)
         for osn in OSES:
             app.add_version(
@@ -594,7 +598,7 @@ def test_persistent_engine_matches_scalar_sequential(seed):
         assert _store_sig(server_a) == _store_sig(server_b)
         assert server_a.schedulers[0].metrics == server_b.schedulers[0].metrics
         # the snapshot genuinely persists within a round of singleton RPCs
-        assert server_b.feeder._engine is not None
+        assert server_b.feeder._engines.get(None) is not None
         comp_a = _completions_from(replies_a, random.Random(seed + rnd))
         comp_b = _completions_from(replies_b, random.Random(seed + rnd))
         ra = _make_requests(hosts_a, seed + rnd * 7 + 1)[0]
@@ -610,11 +614,11 @@ def test_persistent_engine_matches_scalar_sequential(seed):
         assert _store_sig(server_a) == _store_sig(server_b)
     # a fill that changed the cache must have bumped the generation; the
     # next RPC rebuilds rather than serving the stale snapshot
-    engine = server_b.feeder._engine
+    engine = server_b.feeder._engines.get(None)
     assert engine is not None
     if engine.version != server_b.feeder.version:
         server_b.rpc(_make_requests(hosts_b, seed)[0], now)
-        assert server_b.feeder._engine.version == server_b.feeder.version
+        assert server_b.feeder._engines[None].version == server_b.feeder.version
 
 
 def test_persistent_engine_survives_and_rebuilds_on_fill():
@@ -627,12 +631,12 @@ def test_persistent_engine_survives_and_rebuilds_on_fill():
         requests={ResourceType.CPU: ResourceRequest(req_runtime=100.0)},
     )
     server.rpc(req(hosts[0]), 0.0)
-    e1 = server.feeder._engine
+    e1 = server.feeder._engines.get(None)
     assert e1 is not None
     server.rpc(req(hosts[1]), 0.1)
-    assert server.feeder._engine is e1  # persisted: no cache change
+    assert server.feeder._engines.get(None) is e1  # persisted: no cache change
     server.tick(600.0)  # transition + fill: cache contents change
     server.rpc(req(hosts[2]), 600.1)
-    e2 = server.feeder._engine
+    e2 = server.feeder._engines.get(None)
     assert e2 is not e1
     assert e2.version == server.feeder.version

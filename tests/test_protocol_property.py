@@ -1,0 +1,122 @@
+"""Hypothesis round-trips on the service wire codec: every encodable
+request and reply (error frames included) must decode back to an equal
+dataclass, for arbitrary floats, unicode strings, and field subsets.
+
+NaN is excluded from the generated floats only because ``nan != nan``
+breaks dataclass equality — the codec itself carries it fine
+(``repr``/``float`` round-trips ``nan`` textually; see the explicit
+non-finite example test in ``test_service.py``).
+"""
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: see requirements-dev.txt
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    CompletedResult,
+    InstanceOutcome,
+    ResourceRequest,
+    ResourceType,
+    ScheduleRequest,
+)
+from repro.core.scheduler import TrickleUp
+from repro.service import (
+    ErrorReply,
+    JobOffer,
+    PingRequest,
+    PongReply,
+    StatsReply,
+    StatsRequest,
+    WorkReply,
+    WorkRequest,
+    decode_reply,
+    decode_request,
+    encode_reply,
+    encode_request,
+)
+
+seqs = st.integers(min_value=0, max_value=2**31)
+ids = st.integers(min_value=1, max_value=2**40)
+exits = st.integers(min_value=-2**31, max_value=2**31)
+floats = st.floats(allow_nan=False)  # inf allowed: repr round-trips it
+texts = st.text(max_size=40)
+
+resource_requests = st.builds(ResourceRequest, floats, floats, floats)
+
+completions = st.builds(
+    CompletedResult,
+    instance_id=ids,
+    outcome=st.sampled_from(list(InstanceOutcome)),
+    runtime=floats,
+    peak_flop_count=floats,
+    exit_code=exits,
+)
+
+trickles = st.builds(TrickleUp, instance_id=ids, fraction_done=floats)
+
+schedule_requests = st.builds(
+    ScheduleRequest,
+    host_id=ids,
+    requests=st.dictionaries(
+        st.sampled_from(list(ResourceType)), resource_requests, max_size=3
+    ),
+    completed=st.lists(completions, max_size=4),
+    trickles=st.lists(trickles, max_size=3),
+    sticky_files=st.lists(texts, max_size=3).map(tuple),
+    usable_disk=floats,
+)
+
+requests = st.one_of(
+    st.builds(PingRequest, seq=seqs),
+    st.builds(StatsRequest, seq=seqs),
+    st.builds(WorkRequest, seq=seqs, request=schedule_requests),
+)
+
+job_offers = st.builds(
+    JobOffer,
+    job_id=ids,
+    instance_id=ids,
+    version_id=ids,
+    est_runtime=floats,
+    est_flops=floats,
+)
+
+replies = st.one_of(
+    st.builds(PongReply, seq=seqs),
+    st.builds(
+        WorkReply,
+        seq=seqs,
+        request_delay=floats,
+        jobs=st.lists(job_offers, max_size=4),
+        delete_sticky=st.lists(texts, max_size=3),
+    ),
+    st.builds(
+        StatsReply,
+        seq=seqs,
+        values=st.dictionaries(texts, floats, max_size=4),
+    ),
+    st.builds(
+        ErrorReply,
+        seq=seqs,
+        code=st.text(
+            alphabet="abcdefghijklmnopqrstuvwxyz-", min_size=1, max_size=16
+        ),
+        message=texts,
+    ),
+)
+
+
+@settings(max_examples=300, deadline=None)
+@given(requests)
+def test_request_roundtrip(req):
+    wire = encode_request(req)
+    assert "\n" not in wire
+    assert decode_request(wire) == req
+
+
+@settings(max_examples=300, deadline=None)
+@given(replies)
+def test_reply_roundtrip(rep):
+    wire = encode_reply(rep)
+    assert "\n" not in wire
+    assert decode_reply(wire) == rep

@@ -1,0 +1,94 @@
+"""Serving-loop satellites: heap-based EDF admission and the on-device
+single-slot cache merge.
+
+The admission queue must pop earliest-deadline-first with FIFO tie order —
+exactly what the old stable ``list.sort`` + ``pop(0)`` produced — and
+``_merge_slot`` must write only the target slot without pulling any cache
+leaf to the host (pinned by running it under ``jax.jit``, where a host
+round-trip raises ``TracerArrayConversionError``).
+"""
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.runtime.serve_loop import AdmissionQueue, Request, _merge_slot  # noqa: E402
+
+
+def _req(rid, deadline):
+    return Request(id=rid, prompt=np.zeros((4,), np.int32), deadline=deadline)
+
+
+class TestAdmissionQueue:
+    def test_pops_earliest_deadline_first(self):
+        q = AdmissionQueue()
+        for rid, dl in ((1, 30.0), (2, 10.0), (3, float("inf")), (4, 20.0)):
+            q.push(_req(rid, dl))
+        assert [q.pop().id for _ in range(len(q))] == [2, 4, 1, 3]
+
+    def test_deadline_ties_pop_fifo(self):
+        # the old implementation was a *stable* sort: equal deadlines kept
+        # submission order; the heap's monotone sequence number pins that
+        q = AdmissionQueue()
+        for rid in range(1, 7):
+            q.push(_req(rid, 5.0))
+        assert [q.pop().id for _ in range(len(q))] == [1, 2, 3, 4, 5, 6]
+
+    def test_interleaved_push_pop(self):
+        q = AdmissionQueue()
+        q.push(_req(1, 50.0))
+        q.push(_req(2, 10.0))
+        assert q.pop().id == 2
+        q.push(_req(3, 5.0))
+        q.push(_req(4, 60.0))
+        assert [q.pop().id for _ in range(len(q))] == [3, 1, 4]
+        assert len(q) == 0 and not q
+
+
+class TestMergeSlot:
+    def _trees(self, slots=4, seq=8):
+        # attention-style (L, B, S, H) + SSM-style (L, B, H) + a leaf with
+        # identical shapes (merge must leave it untouched)
+        batch = {
+            "attn": jnp.arange(2 * slots * seq * 3, dtype=jnp.float32).reshape(
+                2, slots, seq, 3
+            ),
+            "ssm": jnp.ones((2, slots, 5), jnp.float32),
+            "step": jnp.zeros((2,), jnp.int32),
+        }
+        one = {
+            "attn": -jnp.ones((2, 1, seq, 3), jnp.float32),
+            "ssm": 7.0 * jnp.ones((2, 1, 5), jnp.float32),
+            "step": jnp.zeros((2,), jnp.int32),
+        }
+        return batch, one
+
+    def test_writes_only_target_slot(self):
+        batch, one = self._trees()
+        slot = 2
+        merged = _merge_slot(batch, one, slot)
+        for key, ax in (("attn", 1), ("ssm", 1)):
+            got = np.asarray(merged[key])
+            want = np.asarray(batch[key]).copy()
+            idx = [slice(None)] * want.ndim
+            idx[ax] = slice(slot, slot + 1)
+            want[tuple(idx)] = np.asarray(one[key])
+            np.testing.assert_array_equal(got, want)
+        np.testing.assert_array_equal(np.asarray(merged["step"]),
+                                      np.asarray(batch["step"]))
+
+    def test_traceable_no_host_round_trip(self):
+        # np.asarray on a tracer raises TracerArrayConversionError, so a
+        # successful jit compile + run proves the merge stays on-device
+        batch, one = self._trees()
+
+        @jax.jit
+        def merge2(b, o):
+            return _merge_slot(b, o, 2)
+
+        merged = merge2(batch, one)
+        eager = _merge_slot(batch, one, 2)
+        for key in batch:
+            np.testing.assert_array_equal(np.asarray(merged[key]),
+                                          np.asarray(eager[key]))

@@ -1,0 +1,318 @@
+"""Shard-aware federated dispatch (§5.1 scale-out).
+
+Pins the parity contract of ``core/shard.py``:
+
+  * host→shard affinity routing (pinned overrides, modulo default);
+  * the shard-parity test the ISSUE asks for — under a pinned affinity map
+    equal to round-robin order, the union of per-shard ``rpc_batch``
+    assignments equals sequential affinity-routed dispatch, per-request and
+    per-store-field (migration disabled so both twins see identical
+    ownership);
+  * single-shard configs never construct a ShardMap (bit-identical to the
+    unsharded goldens by construction);
+  * deterministic work migration: a starved shard steals the lowest-index
+    live slots from ring-order donors, donors never drop below the
+    watermark, and any move bumps the feeder generation.
+"""
+import pytest
+
+from repro.core import (
+    App,
+    AppVersion,
+    Host,
+    Job,
+    Platform,
+    ProcessingResource,
+    ProjectServer,
+    ResourceRequest,
+    ResourceType,
+    ScheduleRequest,
+    ShardMap,
+    ShardPolicy,
+    default_cpu_plan_class,
+    next_id,
+    reset_ids,
+)
+
+OSES = ("windows", "mac", "linux")
+
+N_SHARDS = 3
+N_HOSTS = 9
+
+
+def _reply_sig(replies):
+    return [
+        (
+            r.request_delay,
+            tuple(r.delete_sticky),
+            tuple(
+                (d.job.id, d.instance.id, d.version.id, d.est_flops, d.est_runtime)
+                for d in r.jobs
+            ),
+        )
+        for r in replies
+    ]
+
+
+def _store_sig(server):
+    inst = tuple(
+        (i.id, i.state.value, i.host_id, i.app_version_id, i.sent_time, i.deadline)
+        for i in sorted(server.store.instances.values(), key=lambda x: x.id)
+    )
+    jobs = tuple(
+        (j.id, j.hr_class, j.hav_version_id, j.min_quorum, j.transition_flag)
+        for j in sorted(server.store.jobs.values(), key=lambda x: x.id)
+    )
+    slots = tuple(
+        (s.instance_id, s.taken, s.skipped) if s is not None else None
+        for s in server.feeder.slots
+    )
+    return inst, jobs, slots
+
+
+def _pinned_affinity():
+    """host i (1-based) → shard (i-1) % N: with requests arriving in host
+    order, affinity routing visits shards 0,1,2,0,1,2,… — exactly the
+    round-robin order of the unsharded sequential path."""
+    return {i + 1: i % N_SHARDS for i in range(N_HOSTS)}
+
+
+def _make_server(*, sharded, vector=False, policy=None, affinity=None,
+                 n_jobs=60, cache_size=48):
+    reset_ids()
+    server = ProjectServer(
+        name="p",
+        cache_size=cache_size,
+        n_scheduler_instances=N_SHARDS,
+        vector_dispatch=vector,
+        sharded_dispatch=sharded,
+        shard_affinity=affinity,
+        shard_policy=policy,
+    )
+    app = App(name="a", min_quorum=1, init_ninstances=1)
+    for osn in OSES:
+        app.add_version(
+            AppVersion(
+                id=next_id("appver"),
+                app_name="a",
+                platform=Platform(osn, "x86_64"),
+                version_num=1,
+                plan_class=default_cpu_plan_class(),
+            )
+        )
+    server.add_app(app)
+    for _ in range(n_jobs):
+        server.submit_job(
+            Job(id=next_id("job"), app_name="a", est_flop_count=1e12), 0.0
+        )
+    hosts = []
+    for i in range(N_HOSTS):
+        h = Host(
+            id=i + 1,
+            platforms=(Platform(OSES[i % 3], "x86_64"),),
+            resources={
+                ResourceType.CPU: ProcessingResource(ResourceType.CPU, 4, 2e10)
+            },
+            volunteer_id=i + 1,
+        )
+        server.add_host(h)
+        hosts.append(h)
+    server.tick(0.0)
+    return server, hosts
+
+
+def _requests(hosts):
+    return [
+        ScheduleRequest(
+            host_id=h.id,
+            requests={
+                ResourceType.CPU: ResourceRequest(req_runtime=3000.0, req_idle=1)
+            },
+        )
+        for h in hosts
+    ]
+
+
+# ---------------------------------------------------------------------------
+# affinity routing
+# ---------------------------------------------------------------------------
+
+
+class TestAffinity:
+    def test_modulo_default_and_pinned_override(self):
+        sm = ShardMap(n_shards=3, cache_size=12, affinity={7: 2, 9: 5})
+        assert [sm.shard_of(h) for h in (1, 2, 3, 4)] == [1, 2, 0, 1]
+        assert sm.shard_of(7) == 2  # pinned
+        assert sm.shard_of(9) == 5 % 3  # pinned values normalized mod n
+        assert sm.shard_of(10) == 1  # unlisted falls back to modulo
+
+    def test_rpc_routes_by_affinity_not_round_robin(self):
+        server, hosts = _make_server(
+            sharded=True, policy=ShardPolicy(low_watermark=0)
+        )
+        assert server.shard_map is not None
+        # two back-to-back requests from the same host hit the same shard
+        # (round-robin would alternate instances)
+        for _ in range(2):
+            server.rpc(_requests(hosts)[3], 0.0)  # host 4 → shard 1
+        stats = server.shard_map.utilization()
+        assert stats[4 % N_SHARDS]["requests"] == 2
+        assert all(
+            s["requests"] == 0 for s in stats if s["shard"] != 4 % N_SHARDS
+        )
+
+    def test_remove_host_purges_pinned_affinity(self):
+        # churn purge completeness: a departing host leaves no affinity
+        # entry behind; a rejoin under the same id falls back to modulo
+        server, _hosts = _make_server(
+            sharded=True, policy=ShardPolicy(low_watermark=0),
+            affinity={5: 2},
+        )
+        assert server.shard_map.shard_of(5) == 2
+        server.remove_host(5)
+        assert 5 not in server.shard_map.affinity
+        assert server.shard_map.shard_of(5) == 5 % N_SHARDS
+
+
+# ---------------------------------------------------------------------------
+# the pinned shard-parity contract
+# ---------------------------------------------------------------------------
+
+
+class TestShardParity:
+    """Union of per-shard ``rpc_batch`` assignments == sequential
+    affinity-routed dispatch, under a pinned affinity map equal to
+    round-robin order, with migration disabled."""
+
+    @pytest.mark.parametrize("vector", [False, True], ids=["scalar", "vector"])
+    def test_batch_equals_sequential_affinity_routed(self, vector):
+        aff = _pinned_affinity()
+        pol = ShardPolicy(low_watermark=0)  # keep twin ownership identical
+        server_a, hosts_a = _make_server(
+            sharded=True, vector=vector, policy=pol, affinity=aff
+        )
+        server_b, hosts_b = _make_server(
+            sharded=True, vector=vector, policy=pol, affinity=aff
+        )
+        reqs_a = _requests(hosts_a)
+        reqs_b = _requests(hosts_b)
+
+        # the pinned map makes affinity order == round-robin order
+        assert [server_a.shard_map.shard_of(r.host_id) for r in reqs_a] == [
+            i % N_SHARDS for i in range(len(reqs_a))
+        ]
+
+        # snapshot slot positions first: the dispatch tail clears a slot
+        # once its instance is sent
+        pos_of = {
+            s.instance_id: p
+            for p, s in enumerate(server_b.feeder.slots)
+            if s is not None
+        }
+
+        replies_a = [server_a.rpc(r, 0.0) for r in reqs_a]  # sequential twin
+        replies_b = server_b.rpc_batch(reqs_b, 0.0)  # one per-shard pass each
+
+        assert _reply_sig(replies_a) == _reply_sig(replies_b)
+        assert _store_sig(server_a) == _store_sig(server_b)
+
+        # ISSUE wording: the union of per-shard assignments matches too
+        def assigned(replies, reqs):
+            return {
+                (req.host_id, d.job.id)
+                for req, rep in zip(reqs, replies)
+                for d in rep.jobs
+            }
+
+        union_b = assigned(replies_b, reqs_b)
+        assert union_b == assigned(replies_a, reqs_a)
+        assert union_b  # the workload actually dispatched something
+
+        # shards really partitioned the work: every dispatched job came out
+        # of a slot owned by the handling shard's slice
+        for req, rep in zip(reqs_b, replies_b):
+            shard = server_b.shard_map.shard_of(req.host_id)
+            owned = set(server_b.shard_map.owned_positions(shard))
+            for d in rep.jobs:
+                assert pos_of[d.instance.id] in owned
+
+    def test_single_shard_config_builds_no_shard_map(self):
+        # the bit-identical-goldens guarantee is structural: one scheduler
+        # instance → no ShardMap → the seed code path, untouched
+        reset_ids()
+        server = ProjectServer(name="p", cache_size=16)
+        assert server.shard_map is None
+        reset_ids()
+        server = ProjectServer(name="p", cache_size=16, n_scheduler_instances=3,
+                               sharded_dispatch=False)
+        assert server.shard_map is None  # explicit opt-out keeps the fallback
+
+
+# ---------------------------------------------------------------------------
+# work migration
+# ---------------------------------------------------------------------------
+
+
+class TestMigration:
+    def _starved_server(self, policy):
+        server, hosts = _make_server(
+            sharded=True, policy=policy, n_jobs=80, cache_size=24
+        )
+        sm = server.shard_map
+        # drain shard 0: mark every slot it owns taken (dispatched)
+        for p in sm.owned_positions(0):
+            slot = server.feeder.slots[p]
+            if slot is not None:
+                slot.taken = True
+        return server, sm
+
+    def test_starved_shard_steals_lowest_index_live_slots(self):
+        pol = ShardPolicy(low_watermark=3, refill_target=5, max_moves=64)
+        server, sm = self._starved_server(pol)
+        donors_before = {
+            s: sm.live_count(server.feeder, s) for s in range(1, N_SHARDS)
+        }
+        version_before = server.feeder.version
+        expected_steal = min(
+            p
+            for s in range(1, N_SHARDS)
+            for p in sm.owned_positions(s)
+            if server.feeder.slots[p] is not None
+            and not server.feeder.slots[p].taken
+        )
+
+        moved = sm.rebalance(server.feeder, 0)
+
+        assert moved == pol.refill_target
+        assert sm.owner[expected_steal] == 0  # lowest-index donor slot first
+        assert sm.live_count(server.feeder, 0) == pol.refill_target
+        for s, before in donors_before.items():
+            assert sm.live_count(server.feeder, s) >= min(before, pol.low_watermark)
+        assert sm.stats[0].migrations_in == moved
+        assert sum(st.migrations_out for st in sm.stats) == moved
+        assert server.feeder.version > version_before  # snapshots rebuild
+        server.store.check_invariants()
+
+    def test_donors_never_drop_below_watermark(self):
+        pol = ShardPolicy(low_watermark=3, refill_target=64, max_moves=64)
+        server, sm = self._starved_server(pol)
+        sm.rebalance(server.feeder, 0)
+        for s in range(1, N_SHARDS):
+            assert sm.live_count(server.feeder, s) >= pol.low_watermark
+
+    def test_zero_watermark_disables_migration(self):
+        pol = ShardPolicy(low_watermark=0)
+        server, sm = self._starved_server(pol)
+        version_before = server.feeder.version
+        assert sm.rebalance(server.feeder, 0) == 0
+        assert server.feeder.version == version_before
+        assert sm.stats[0].migrations_in == 0
+
+    def test_migration_is_deterministic(self):
+        pol = ShardPolicy(low_watermark=3, refill_target=5)
+        owners = []
+        for _ in range(2):
+            server, sm = self._starved_server(pol)
+            sm.rebalance(server.feeder, 0)
+            owners.append(sm.owner.tolist())
+        assert owners[0] == owners[1]

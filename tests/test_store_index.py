@@ -234,6 +234,79 @@ class TestShardedDeadlines:
             server.store.check_invariants()
 
 
+class TestDeleteReadiness:
+    """Satellite: the file deleter's outstanding-instance re-check is
+    deferred to instance-*terminal* events — a delete-pending job blocked
+    on a straggler costs nothing per tick, and promotes into
+    ``delete_ready`` the moment its last outstanding instance resolves.
+    The ``use_indexes=False`` scan stays the oracle."""
+
+    def _blocked_job(self):
+        reset_ids()
+        server = make_server(min_quorum=2)
+        server.enabled.file_deleter = False
+        server.enabled.purger = False
+        job = server.submit_job(Job(id=next_id("job"), app_name="w",
+                                    est_flop_count=1e9))
+        server.tick(0.0)  # creates the quorum-2 instances
+        a, b = server.store.job_instances(job.id)
+        a.outcome = InstanceOutcome.SUCCESS
+        a.state = InstanceState.OVER
+        b.state = InstanceState.IN_PROGRESS  # the straggler
+        job.assimilated = True  # project-side assimilation done
+        return server, job, b
+
+    def test_blocked_until_last_outstanding_instance_resolves(self):
+        server, job, straggler = self._blocked_job()
+        store = server.store
+
+        assert job.id in store.delete_pending
+        assert job.id not in store.delete_ready
+        assert store.pending_file_deletion() == []  # indexed: deferred
+        store.check_invariants()
+
+        # the scan oracle surfaces the job; the deleter daemon's own
+        # outstanding check is what filters it there
+        store.use_indexes = False
+        assert store.pending_file_deletion() == [job]
+        assert server.delete_files(1.0) == 0
+        assert not job.files_deleted
+        store.use_indexes = True
+
+        # instance-terminal event: the straggler resolves → ready
+        straggler.outcome = InstanceOutcome.NO_REPLY
+        straggler.state = InstanceState.OVER
+        assert job.id in store.delete_ready
+        assert store.pending_file_deletion() == [job]
+        store.check_invariants()
+
+        assert server.delete_files(2.0) == 1
+        assert job.files_deleted
+        assert job.id not in store.delete_ready  # reindexed on files_deleted
+        assert job.id in store.purge_pending
+        store.check_invariants()
+
+    def test_instance_reset_blocks_again(self):
+        # UNSENT is outstanding too: a retry instance created after
+        # assimilation re-blocks the job until it resolves
+        server, job, straggler = self._blocked_job()
+        store = server.store
+        straggler.outcome = InstanceOutcome.NO_REPLY
+        straggler.state = InstanceState.OVER
+        assert job.id in store.delete_ready
+
+        retry = store.create_instance(job)  # new UNSENT row
+        assert job.id not in store.delete_ready
+        assert store.pending_file_deletion() == []
+        store.check_invariants()
+
+        retry.state = InstanceState.IN_PROGRESS
+        assert job.id not in store.delete_ready
+        retry.state = InstanceState.OVER
+        assert job.id in store.delete_ready
+        store.check_invariants()
+
+
 class TestStoreIndexes:
     def _store(self, min_quorum=2):
         reset_ids()
